@@ -1,0 +1,78 @@
+"""Generate the §Dry-run and §Roofline markdown tables for EXPERIMENTS.md
+from out/dryrun/*.json.
+
+Run:  PYTHONPATH=src python -m benchmarks.report_tables [--suffix ""]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+OUT = pathlib.Path(__file__).resolve().parents[1] / "out" / "dryrun"
+
+
+def fmt_b(x: float) -> str:
+    for unit, div in (("TB", 2**40), ("GB", 2**30), ("MB", 2**20)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(suffix: str = ""):
+    rows = []
+    for f in sorted(OUT.glob("*.json")):
+        stem = f.stem
+        # baseline files end exactly in __single / __multi; lever runs carry
+        # an extra _<tag> suffix and are excluded unless requested
+        tail = stem.split("__")[-1]
+        if suffix:
+            if not tail.endswith(suffix):
+                continue
+        elif tail not in ("single", "multi"):
+            continue
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suffix", default="")
+    args = ap.parse_args()
+    rows = [r for r in load(args.suffix)]
+    ok = [r for r in rows if r.get("status") == "ok"]
+    sk = [r for r in rows if r.get("status") == "skipped"]
+
+    print("### Dry-run table (per-device, compiled artifacts)\n")
+    print("| arch | shape | mesh | chips | HLO GFLOPs/chip | HBM bytes/chip "
+          "| wire bytes | x-pod bytes | peak mem/chip | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in ok:
+        c = r["cost"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['chips']} "
+              f"| {c['flops']/1e9:,.0f} | {fmt_b(c['bytes_accessed'])} "
+              f"| {fmt_b(r['collectives']['wire_bytes'])} "
+              f"| {fmt_b(r['collectives']['cross_pod_bytes'])} "
+              f"| {fmt_b(r['memory']['peak_bytes_per_device'])} "
+              f"| {r['compile_s']:.0f} |")
+    print()
+    for r in sk:
+        print(f"- **skipped** {r['arch']} x {r['shape']} ({r['mesh']}): "
+              f"{r['reason']}")
+
+    print("\n### Roofline table (TPU v5e terms, seconds/step/chip)\n")
+    print("| arch | shape | mesh | compute | memory | collective | dominant "
+          "| MODEL_FLOPS/chip | useful ratio | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for r in ok:
+        t = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {t['compute_s']:.3g} | {t['memory_s']:.3g} "
+              f"| {t['collective_s']:.3g} | **{t['dominant']}** "
+              f"| {t['model_flops_per_chip']:.3g} "
+              f"| {t['useful_flops_ratio']:.2f} | {t['mfu_bound']:.4f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Quickstart: general-purpose SpMM with the Sextans engine.
+
+Computes C = alpha*A@B + beta*C for a graph-like sparse matrix through the
+full pipeline (Eq.2-4 partitioning -> packing -> Pallas kernel in interpret
+mode -> fused epilogue) and checks the result against the numpy oracle.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.engine import SextansEngine
+from repro.core.sparse import power_law_sparse, spmm_reference
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # A: a 1000x800 power-law (social-network-like) sparse matrix
+    a = power_law_sparse(1000, 800, avg_nnz_per_row=6, seed=42)
+    print(f"A: {a.shape}, nnz={a.nnz}, density={a.density:.4f}")
+
+    n = 64
+    b = rng.standard_normal((800, n)).astype(np.float32)
+    c = rng.standard_normal((1000, n)).astype(np.float32)
+    alpha, beta = 1.0, 0.5
+
+    engine = SextansEngine(tm=128, k0=256, chunk=8, impl="pallas")
+    packed = engine.pack(a)
+    print(f"packed: MBxNWxLW = {packed.geometry}, "
+          f"padding handled by Q pointers (HFlex)")
+
+    out = engine.spmm(packed, jnp.asarray(b), jnp.asarray(c), alpha, beta)
+
+    ref = spmm_reference(a, b, c, alpha, beta)
+    err = np.abs(np.asarray(out) - ref).max() / (np.abs(ref).max() + 1e-9)
+    print(f"max relative error vs oracle: {err:.2e}")
+    assert err < 1e-4
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

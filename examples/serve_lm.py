@@ -1,0 +1,56 @@
+"""LM serving: prefill a batch of prompts, then greedy-decode tokens
+through the KV/state-cache path — the serving loop the decode_32k /
+long_500k dry-run cells exercise at production scale, here at CPU scale.
+
+Works for both attention (llama-family) and recurrent (xlstm) caches.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch llama3.2-1b]
+"""
+
+import argparse
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.launch.serve import lm_generate
+from repro.models import model as M
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b",
+                    choices=["llama3.2-1b", "xlstm-125m", "hymba-1.5b"])
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    cfg = smoke_config(args.arch)
+    params = M.init_params(cfg, seed=0)
+
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+        jnp.int32)
+
+    t0 = time.time()
+    out = lm_generate(params, cfg, prompts, steps=args.steps)
+    dt = time.time() - t0
+    toks = args.batch * args.steps
+    print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len} "
+          f"decoded={args.steps}")
+    print(f"output tokens shape {out.shape}; "
+          f"{toks/dt:.1f} tok/s (CPU, reduced config)")
+    assert out.shape == (args.batch, args.steps)
+    assert int(out.min()) >= 0 and int(out.max()) < cfg.vocab_size
+    # determinism: same prompts -> same greedy continuation
+    out2 = lm_generate(params, cfg, prompts, steps=args.steps)
+    assert bool((out == out2).all())
+    print("greedy decode deterministic OK")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""End-to-end training driver: a reduced llama3.2-family model trained for
+a few hundred steps on the synthetic token stream, with checkpointing and
+kill-resume, on whatever devices exist.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    args = ap.parse_args()
+    return train_main([
+        "--arch", args.arch, "--smoke",
+        "--steps", str(args.steps),
+        "--seq", "64", "--batch", "8", "--lr", "3e-3",
+        "--ckpt-every", "100", "--log-every", "20",
+    ])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

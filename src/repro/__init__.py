@@ -1,0 +1,2 @@
+"""repro: Sextans-on-TPU — streaming SpMM engine + multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,149 @@
+"""Checkpointing: atomic, versioned, keep-k, resumable, elastic.
+
+Fault-tolerance posture for 1000+ nodes:
+
+* **atomic**: write to a temp dir, fsync, rename — a preempted save never
+  corrupts the latest checkpoint;
+* **self-describing**: a manifest (step, data-iterator state, config name,
+  tree structure) rides with the arrays;
+* **keep-k GC** with never-delete-latest;
+* **elastic restore**: arrays are saved *unsharded* (gathered); restore
+  re-shards onto whatever mesh the new job has (see reshard.py) — a 512-chip
+  checkpoint restores onto 256 chips and vice versa;
+* **auto-resume**: ``latest_step`` + ``restore`` make the train loop
+  restartable from SIGKILL at any point (tests simulate this).
+
+Array payloads use numpy ``.npz`` (offline-safe); the manifest is JSON.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]
+
+
+def _flatten_with_names(tree: Any) -> List[Tuple[str, Any]]:
+    # None is a real leaf here (e.g. TrainState.master when no fp32 copy
+    # exists) so save/load see identical tree structures.
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path)
+        out.append((name or "leaf", leaf))
+    return out
+
+
+def save_pytree(tree: Any, directory: pathlib.Path) -> None:
+    directory.mkdir(parents=True, exist_ok=True)
+    arrays = {}
+    for name, leaf in _flatten_with_names(tree):
+        if leaf is None:
+            continue
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            arrays[name + "::bf16"] = arr.view(np.uint16)
+        else:
+            arrays[name] = arr
+    np.savez(directory / "arrays.npz", **arrays)
+
+
+def load_pytree(tree_like: Any, directory: pathlib.Path) -> Any:
+    with np.load(directory / "arrays.npz") as z:
+        data = {}
+        for key in z.files:
+            if key.endswith("::bf16"):
+                data[key[:-6]] = z[key].view(jnp.bfloat16)
+            else:
+                data[key] = z[key]
+    names = [n for n, leaf in _flatten_with_names(tree_like) if leaf is not None]
+    leaves = []
+    for n, leaf in _flatten_with_names(tree_like):
+        if leaf is None:
+            leaves.append(None)
+            continue
+        if n not in data:
+            raise KeyError(f"checkpoint missing array {n!r}")
+        got = data[n]
+        want_shape = tuple(leaf.shape)
+        if tuple(got.shape) != want_shape:
+            raise ValueError(f"{n}: checkpoint shape {got.shape} != {want_shape}")
+        leaves.append(got)
+    flat, treedef = jax.tree_util.tree_flatten(
+        tree_like, is_leaf=lambda x: x is None)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    root: pathlib.Path
+    keep: int = 3
+
+    def __post_init__(self):
+        self.root = pathlib.Path(self.root)
+        self.root.mkdir(parents=True, exist_ok=True)
+
+    def _step_dir(self, step: int) -> pathlib.Path:
+        return self.root / f"step_{step:010d}"
+
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.root.glob("step_*"):
+            if (p / "MANIFEST.json").exists():
+                out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict[str, Any]] = None) -> pathlib.Path:
+        final = self._step_dir(step)
+        tmp = pathlib.Path(tempfile.mkdtemp(prefix=f".tmp_step{step}_",
+                                            dir=self.root))
+        try:
+            save_pytree(tree, tmp)
+            manifest = {"step": step, "extra": extra or {}}
+            mpath = tmp / "MANIFEST.json"
+            mpath.write_text(json.dumps(manifest, indent=2))
+            with open(mpath) as f:
+                os.fsync(f.fileno())
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)   # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+        return final
+
+    def restore(self, tree_like: Any, step: Optional[int] = None) -> Tuple[Any, Dict[str, Any]]:
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(f"no checkpoints in {self.root}")
+        d = self._step_dir(step)
+        manifest = json.loads((d / "MANIFEST.json").read_text())
+        tree = load_pytree(tree_like, d)
+        return tree, manifest
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: max(0, len(steps) - self.keep)]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+        # clean stranded temp dirs from crashed saves
+        for p in self.root.glob(".tmp_step*"):
+            shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,171 @@
+"""Architecture registry + assigned input shapes + input specs.
+
+Every assigned architecture is a ``ModelConfig`` in its own module.
+``get_config(name)`` returns the full published config; ``smoke_config``
+returns a reduced same-family config for CPU smoke tests; ``input_specs``
+builds ShapeDtypeStruct stand-ins for the dry-run (no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+__all__ = [
+    "ARCH_NAMES", "SHAPES", "get_config", "smoke_config", "input_specs",
+    "shape_applicable", "cell_table",
+]
+
+ARCH_NAMES = (
+    "llama4-scout-17b-a16e",
+    "qwen3-moe-235b-a22b",
+    "xlstm-125m",
+    "qwen1.5-32b",
+    "llama3.2-1b",
+    "qwen2-0.5b",
+    "qwen2-72b",
+    "internvl2-76b",
+    "hymba-1.5b",
+    "seamless-m4t-large-v2",
+)
+
+_MODULES = {
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "xlstm-125m": "xlstm_125m",
+    "qwen1.5-32b": "qwen1_5_32b",
+    "llama3.2-1b": "llama3_2_1b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "qwen2-72b": "qwen2_72b",
+    "internvl2-76b": "internvl2_76b",
+    "hymba-1.5b": "hymba_1_5b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+#                 name:        (seq_len, global_batch, step kind)
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """Whether a (arch, shape) cell runs; reason if skipped (DESIGN.md §5)."""
+    if shape == "long_500k" and not cfg.supports_long_context:
+        return False, "pure full-attention arch: 500k decode needs sub-quadratic mixing"
+    return True, ""
+
+
+def cell_table():
+    """All 40 assigned (arch x shape) cells with applicability."""
+    rows = []
+    for a in ARCH_NAMES:
+        cfg = get_config(a)
+        for s in SHAPES:
+            ok, why = shape_applicable(cfg, s)
+            rows.append((a, s, ok, why))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# reduced configs for smoke tests
+# ---------------------------------------------------------------------------
+
+
+def smoke_config(name: str, seq: int = 32) -> ModelConfig:
+    """Same-family reduced config: tiny widths, 2 layers, fp32, CPU-sized."""
+    cfg = get_config(name)
+    heads = 4
+    kv = heads if cfg.num_kv_heads == cfg.num_heads else 2
+    n_layers = 2
+    lt = None
+    if cfg.layer_types is not None:
+        lt = tuple(cfg.types[i] for i in range(0, cfg.num_layers,
+                                               max(1, cfg.num_layers // n_layers)))[:n_layers]
+        # keep at least one of each kind present in the original
+        kinds = set(cfg.types)
+        if set(lt) != kinds and len(kinds) <= n_layers:
+            lt = tuple(sorted(kinds))[:n_layers]
+    return dataclasses.replace(
+        cfg,
+        num_layers=n_layers,
+        num_encoder_layers=min(cfg.num_encoder_layers, 2),
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        shared_expert_ff=128 if cfg.shared_expert else 0,
+        layer_types=lt,
+        sliding_window=min(cfg.sliding_window, 16),
+        ssm_state=min(cfg.ssm_state, 4) or cfg.ssm_state,
+        frontend_dim=32 if cfg.frontend != "none" else 0,
+        frontend_len=8 if cfg.frontend != "none" else 0,
+        param_dtype="float32",
+        compute_dtype="float32",
+        attn_chunk_q=16,
+        attn_chunk_k=16,
+    )
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct, no allocation)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> Dict[str, Any]:
+    """Inputs for the step function of a given shape cell.
+
+    train:   batch dict {tokens, labels [, patches|frames]}
+    prefill: batch dict {tokens [, patches|frames]}
+    decode:  (cache pytree, tokens (B,1)) — cache at seq_len fill level.
+    """
+    from repro.models import model as M
+
+    seq, gbs, kind = SHAPES[shape]
+    i32 = jnp.int32
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct((b, s), i32)
+
+    if kind in ("train", "prefill"):
+        batch: Dict[str, Any] = {}
+        s_text = seq
+        if cfg.frontend == "vision_stub":
+            s_text = seq - cfg.frontend_len
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (gbs, cfg.frontend_len, cfg.frontend_dim), jnp.bfloat16
+                if cfg.compute_dtype == "bfloat16" else jnp.float32)
+        if cfg.frontend == "audio_stub":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (gbs, max(seq // 4, 1), cfg.frontend_dim), jnp.bfloat16
+                if cfg.compute_dtype == "bfloat16" else jnp.float32)
+        batch["tokens"] = tok(gbs, s_text)
+        if kind == "train":
+            batch["labels"] = tok(gbs, s_text)
+        return {"batch": batch}
+
+    # decode: eval_shape so multi-TB caches are never allocated
+    enc_len = max(seq // 4, 1) if cfg.is_encoder_decoder else 0
+    cache_specs = jax.eval_shape(
+        lambda: M.init_cache(cfg, gbs, seq, enc_len=enc_len))
+    return {"cache": cache_specs, "tokens": tok(gbs, 1)}

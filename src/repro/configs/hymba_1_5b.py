@@ -1,0 +1,22 @@
+"""Hymba-1.5B: parallel attention+mamba heads per block; sliding-window
+attention except first/middle/last global layers; ssm_state=16.
+[arXiv:2411.13676; hf]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    num_layers=32,
+    d_model=1600,
+    num_heads=25,
+    num_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    layer_types=("hymba",) * 32,
+    sliding_window=1024,
+    ssm_state=16,
+    ssm_expand=2,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

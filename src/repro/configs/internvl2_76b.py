@@ -1,0 +1,21 @@
+"""InternVL2-Llama3-76B: InternViT frontend (STUB: precomputed patch
+embeddings per assignment) + Llama3-70B-like backbone. [arXiv:2404.16821; unverified]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-76b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=28672,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    frontend="vision_stub",
+    frontend_dim=3200,   # InternViT-6B hidden size
+    frontend_len=256,    # patch positions prepended to the text sequence
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

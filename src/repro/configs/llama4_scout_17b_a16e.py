@@ -1,0 +1,23 @@
+"""Llama-4-Scout-17B-16E: 16-expert top-1 MoE with shared expert.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    vocab_size=202048,
+    num_experts=16,
+    experts_per_token=1,
+    shared_expert=True,
+    shared_expert_ff=8192,
+    rope_theta=500000.0,
+    act="silu",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

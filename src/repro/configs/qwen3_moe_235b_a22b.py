@@ -1,0 +1,20 @@
+"""Qwen3-235B-A22B: 128-expert top-8 MoE. [hf:Qwen/Qwen3-30B-A3B; hf]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab_size=151936,
+    num_experts=128,
+    experts_per_token=8,
+    rope_theta=1000000.0,
+    act="silu",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

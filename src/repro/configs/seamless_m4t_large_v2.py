@@ -1,0 +1,22 @@
+"""SeamlessM4T-large-v2: encoder-decoder; audio frontend STUBBED
+(precomputed frame embeddings per assignment). [arXiv:2308.11596; hf]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256206,
+    is_encoder_decoder=True,
+    num_encoder_layers=24,
+    frontend="audio_stub",
+    frontend_dim=1024,
+    act="relu",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

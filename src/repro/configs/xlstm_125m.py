@@ -1,0 +1,20 @@
+"""xLSTM-125M: alternating mLSTM/sLSTM blocks (1 sLSTM per 4).
+[arXiv:2405.04517; unverified]"""
+from repro.models.common import ModelConfig
+
+_TYPES = tuple("slstm" if i % 4 == 1 else "mlstm" for i in range(12))
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    layer_types=_TYPES,
+    ssm_expand=2,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,176 @@
+"""SextansEngine: the general-purpose SpMM engine (paper's HFlex, in JAX).
+
+The paper's headline property is that *one synthesized accelerator serves
+any SpMM* — no re-running synthesis/place/route per problem. The JAX
+analogue of synthesis is XLA compilation: naive jit retraces per shape.
+The engine restores the HFlex property by
+
+1. packing every matrix into bucketed slab geometry (power-of-two LW /
+   padded N), so distinct matrices hit the *same* compiled executable;
+2. tracking executable-cache hits/misses (``stats``) the way the paper
+   counts avoided place/route runs;
+3. driving all data-dependent work (per-slab non-zero counts) through the
+   scalar-prefetched pointer matrix ``q`` — contents change per problem,
+   the compiled program does not.
+
+Also provides the multi-chip execution plan: A row-blocks sharded across
+the ``data`` axis (the paper's `row mod P` lifted to chips — C shards are
+disjoint, the inner loop needs **zero** cross-chip collectives), B
+column-tiles sharded across ``model``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hflex import bucket_geometry
+from repro.core.partition import SextansParams, cdiv
+from repro.core.sparse import SparseMatrix
+
+# NOTE: repro.kernels.ops is imported lazily inside methods — importing it
+# here would cycle (kernels.ops -> core.hflex -> core.__init__ -> engine).
+
+__all__ = ["SextansEngine", "EngineStats"]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    packs: int = 0
+    calls: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    padded_slots: int = 0
+    real_nnz: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+
+class SextansEngine:
+    """General-purpose SpMM executor with an HFlex executable cache."""
+
+    def __init__(
+        self,
+        tm: int = 128,
+        k0: int = 4096,
+        chunk: int = 8,
+        tn: int = 128,
+        impl: str = "pallas",
+        interleave: bool = True,
+        bucket: bool = True,
+        interpret: bool = True,
+    ):
+        self.tm, self.k0, self.chunk, self.tn = tm, k0, chunk, tn
+        self.impl = impl
+        self.interleave = interleave
+        self.bucket = bucket
+        self.interpret = interpret
+        self.stats = EngineStats()
+        self._seen_signatures: set = set()
+
+    # -- preprocessing ------------------------------------------------------
+
+    def pack(self, a: SparseMatrix) -> "PackedSpMM":
+        from repro.kernels.ops import pack_for_device
+
+        packed = pack_for_device(
+            a, tm=self.tm, k0=self.k0, chunk=self.chunk,
+            interleave=self.interleave, bucket=self.bucket,
+        )
+        self.stats.packs += 1
+        self.stats.real_nnz += packed.nnz
+        self.stats.padded_slots += int(np.prod(packed.vals.shape)) - packed.nnz
+        return packed
+
+    # -- execution ----------------------------------------------------------
+
+    def signature(self, packed, n: int, alpha: float, beta: float) -> Tuple:
+        """Executable identity: geometry + epilogue constants (everything
+        that forces a recompile). Matrix *contents* are excluded — HFlex."""
+        npad = cdiv(n, self.tn) * self.tn
+        return (*packed.geometry, packed.tm, packed.k0, packed.chunk,
+                packed.interleaved, npad, float(alpha), float(beta), self.impl)
+
+    def spmm(
+        self,
+        packed,
+        b: jax.Array,
+        c: Optional[jax.Array] = None,
+        alpha: float = 1.0,
+        beta: float = 0.0,
+    ) -> jax.Array:
+        from repro.kernels.ops import sextans_spmm
+
+        sig = self.signature(packed, b.shape[1], alpha, beta)
+        if sig in self._seen_signatures:
+            self.stats.cache_hits += 1
+        else:
+            self.stats.cache_misses += 1
+            self._seen_signatures.add(sig)
+        self.stats.calls += 1
+        return sextans_spmm(
+            packed, b, c, alpha=alpha, beta=beta,
+            impl=self.impl, tn=self.tn, interpret=self.interpret,
+        )
+
+    def __call__(self, a: SparseMatrix, b, c=None, alpha: float = 1.0, beta: float = 0.0):
+        return self.spmm(self.pack(a), jnp.asarray(b),
+                         None if c is None else jnp.asarray(c), alpha, beta)
+
+    # -- distribution plan --------------------------------------------------
+
+    @staticmethod
+    def shard_specs(data_axis: str = "data", model_axis: str = "model") -> Dict[str, P]:
+        """PartitionSpecs for the sharded SpMM:
+
+        * slabs (MB, NW, LW): MB over data — each chip owns disjoint row
+          blocks => disjoint C rows => no collective in the compute loop
+          (the paper's disjoint-PE property, Eq. 4, at chip scale);
+        * B (K, N): N over model — the N0 column-tile loop of Eq. 2 at chip
+          scale; replicated over data (one broadcast per window, amortized);
+        * C (M, N): M over data, N over model — fully disjoint shards.
+        """
+        return {
+            "vals": P(data_axis, None, None),
+            "cols": P(data_axis, None, None),
+            "rows": P(data_axis, None, None),
+            "q": P(data_axis, None),
+            "b": P(None, model_axis),
+            "c": P(data_axis, model_axis),
+        }
+
+    def sharded_spmm_fn(self, mesh: Mesh, packed, n: int,
+                        alpha: float = 1.0, beta: float = 0.0):
+        """Build a jit'd sharded SpMM for lowering/execution on a mesh."""
+        from repro.kernels.ops import PackedSpMM, sextans_spmm
+
+        specs = self.shard_specs()
+        impl = self.impl
+        tn = self.tn
+        interp = self.interpret
+
+        def fn(pk: PackedSpMM, b, c):
+            return sextans_spmm(pk, b, c, alpha=alpha, beta=beta,
+                                impl=impl, tn=tn, interpret=interp)
+
+        pk_shard = PackedSpMM(
+            vals=specs["vals"], cols=specs["cols"], rows=specs["rows"], q=specs["q"],
+            m=packed.m, k=packed.k, tm=packed.tm, k0=packed.k0,
+            chunk=packed.chunk, interleaved=packed.interleaved, nnz=packed.nnz,
+        )
+        in_shardings = (
+            jax.tree.map(lambda s: NamedSharding(mesh, s), pk_shard,
+                         is_leaf=lambda x: isinstance(x, P)),
+            NamedSharding(mesh, specs["b"]),
+            NamedSharding(mesh, specs["c"]),
+        )
+        out_shardings = NamedSharding(mesh, specs["c"])
+        return jax.jit(fn, in_shardings=in_shardings, out_shardings=out_shardings)

@@ -1,0 +1,309 @@
+"""HFlex packing: scheduled non-zero streams + pointer lists Q.
+
+Two packed representations are produced from one :class:`SparseMatrix`:
+
+1. **PE streams** (paper-faithful, Section 3.4): per PE ``p``, the scheduled
+   non-zero lists of all windows ``A_pj`` concatenated linearly, with a
+   pointer list ``Q[p]`` of ``K/K0 + 1`` entries recording each window's
+   start. Elements are encoded in the paper's 64-bit format
+   (18-bit row | 14-bit col | 32-bit value). This feeds the cycle-accurate
+   performance model and the fidelity tests.
+
+2. **Block slabs** (TPU kernel format): per (TM-row block, window), non-zeros
+   padded to a chunk multiple and stored in dense slabs
+   ``vals/cols/rows : (MB, NW, LW)`` with a count matrix ``q : (MB, NW)``.
+   ``q`` is passed to the Pallas kernel as a *scalar-prefetch* operand —
+   the TPU incarnation of the paper's pointer list Q: one compiled kernel
+   executes any matrix whose padded geometry fits the bucket.
+
+Padding slots carry ``val = 0`` so they are computationally inert (the
+paper's bubbles); correctness never depends on ``q``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .partition import SextansParams, WindowPartition, block_rows, bin_rows_mod, cdiv, partition_windows
+from .schedule import BUBBLE, Schedule, schedule_nonzeros
+from .sparse import SparseMatrix
+
+__all__ = [
+    "encode_a64",
+    "decode_a64",
+    "PEStreams",
+    "pack_pe_streams",
+    "BlockSlabs",
+    "pack_block_slabs",
+    "bucket_geometry",
+]
+
+# ---------------------------------------------------------------------------
+# 64-bit element encoding (paper Section 3.2, step 1):
+#   [63:46] row (18 bits) | [45:32] col (14 bits) | [31:0] fp32 value
+# ---------------------------------------------------------------------------
+
+_ROW_BITS = 18
+_COL_BITS = 14
+
+
+def encode_a64(row: np.ndarray, col: np.ndarray, val: np.ndarray) -> np.ndarray:
+    if row.size and (row.max() >= (1 << _ROW_BITS) or row.min() < 0):
+        raise ValueError("row index exceeds 18-bit compressed range")
+    if col.size and (col.max() >= (1 << _COL_BITS) or col.min() < 0):
+        raise ValueError("col index exceeds 14-bit compressed range")
+    bits = val.astype(np.float32).view(np.uint32).astype(np.uint64)
+    word = (
+        (row.astype(np.uint64) << np.uint64(_COL_BITS + 32))
+        | (col.astype(np.uint64) << np.uint64(32))
+        | bits
+    )
+    return word
+
+
+def decode_a64(word: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    row = (word >> np.uint64(_COL_BITS + 32)).astype(np.int32)
+    col = ((word >> np.uint64(32)) & np.uint64((1 << _COL_BITS) - 1)).astype(np.int32)
+    val = (word & np.uint64(0xFFFFFFFF)).astype(np.uint32).view(np.float32)
+    return row, col, val
+
+
+# ---------------------------------------------------------------------------
+# 1. Paper-faithful PE streams
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PEStreams:
+    """Scheduled per-PE streams + Q pointers (paper Fig. 5 (k)(l))."""
+
+    params: SextansParams
+    shape: Tuple[int, int]
+    nnz: int
+    # stream[p]: uint64 array of scheduled elements *including bubbles*
+    # (bubble = all-ones word, row index 2^18-1 is reserved).
+    streams: List[np.ndarray]
+    # q[p]: int64 array of K/K0+1 window start offsets into streams[p]
+    q: List[np.ndarray]
+    total_cycles: int          # max over PEs of stream length (parallel PEs)
+    bubble_fraction: float
+
+    BUBBLE_WORD = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+def pack_pe_streams(
+    a: SparseMatrix,
+    params: Optional[SextansParams] = None,
+    reorder_window: Optional[int] = None,
+    hub_split: int = 0,
+) -> PEStreams:
+    """Partition (Eq. 3-4) -> schedule (Sec. 3.3) -> pack linearly with Q.
+
+    ``hub_split > 0`` enables the beyond-paper virtual-sub-row transform
+    (schedule.split_hub_rows) before scheduling: hub rows stop serializing
+    a PE; merged back in the CompC pass."""
+    from .schedule import split_hub_rows
+
+    params = params or SextansParams()
+    a.validate()
+    m, k = a.shape
+    windows = partition_windows(a, params.K0)
+    nw = len(windows)
+    streams: List[List[np.ndarray]] = [[] for _ in range(params.P)]
+    qs: List[List[int]] = [[0] for _ in range(params.P)]
+    total_bubbles = 0
+    total_slots = 0
+    for w in windows:
+        per_pe = bin_rows_mod(w, params.P)
+        for p in range(params.P):
+            wp = per_pe[p]
+            sched_rows = (split_hub_rows(wp.row, hub_split)
+                          if hub_split else wp.row)
+            sched = schedule_nonzeros(sched_rows, params.D, reorder_window)
+            words = np.full(sched.cycles, PEStreams.BUBBLE_WORD, np.uint64)
+            real = sched.slots != BUBBLE
+            src = sched.slots[real]
+            words[real] = encode_a64(wp.row[src], wp.col[src], wp.val[src])
+            streams[p].append(words)
+            qs[p].append(qs[p][-1] + sched.cycles)
+            total_bubbles += sched.bubbles
+            total_slots += sched.cycles
+    cat = [
+        np.concatenate(s) if s else np.empty((0,), np.uint64) for s in streams
+    ]
+    return PEStreams(
+        params=params,
+        shape=(m, k),
+        nnz=a.nnz,
+        streams=cat,
+        q=[np.asarray(qq, np.int64) for qq in qs],
+        total_cycles=max((len(s) for s in cat), default=0),
+        bubble_fraction=(total_bubbles / total_slots) if total_slots else 0.0,
+    )
+
+
+def unpack_pe_streams(ps: PEStreams) -> SparseMatrix:
+    """Inverse of pack_pe_streams (for round-trip property tests)."""
+    rows, cols, vals = [], [], []
+    k0, p_ = ps.params.K0, ps.params.P
+    for p in range(p_):
+        stream, q = ps.streams[p], ps.q[p]
+        for j in range(len(q) - 1):
+            words = stream[q[j] : q[j + 1]]
+            words = words[words != PEStreams.BUBBLE_WORD]
+            if words.size == 0:
+                continue
+            lr, lc, v = decode_a64(words)
+            rows.append(lr * p_ + p)          # undo mod-interleave compression
+            cols.append(lc + j * k0)          # undo window compression
+            vals.append(v)
+    if not rows:
+        return SparseMatrix(ps.shape, np.empty(0, np.int32), np.empty(0, np.int32), np.empty(0, np.float32))
+    sm = SparseMatrix(
+        ps.shape,
+        np.concatenate(rows).astype(np.int32),
+        np.concatenate(cols).astype(np.int32),
+        np.concatenate(vals).astype(np.float32),
+    )
+    return sm.sorted_column_major()
+
+
+# ---------------------------------------------------------------------------
+# 2. TPU block-slab format
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BlockSlabs:
+    """Dense slabs of packed non-zeros for the Pallas kernel.
+
+    vals : (MB, NW, LW) float32   — 0.0 in padding slots
+    cols : (MB, NW, LW) int32     — local col in [0, K0), 0 in padding
+    rows : (MB, NW, LW) int32     — local row in [0, TM), 0 in padding
+    q    : (MB, NW)     int32     — real nnz count per slab (chunk-ceiled)
+    """
+
+    m: int
+    k: int
+    tm: int
+    k0: int
+    chunk: int
+    vals: np.ndarray
+    cols: np.ndarray
+    rows: np.ndarray
+    q: np.ndarray
+    nnz: int
+
+    @property
+    def mb(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def nw(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def lw(self) -> int:
+        return self.vals.shape[2]
+
+    @property
+    def padding_fraction(self) -> float:
+        total = self.vals.size
+        return 1.0 - self.nnz / total if total else 0.0
+
+    @property
+    def slab_utilization(self) -> float:
+        """nnz / sum(q): how dense the *executed* slots are (the scheduler's
+        bubble metric — excludes the tail padding that q skips)."""
+        executed = int(self.q.sum())
+        return self.nnz / executed if executed else 1.0
+
+
+def pack_block_slabs(
+    a: SparseMatrix,
+    tm: int = 128,
+    k0: int = 4096,
+    chunk: int = 8,
+    lw_bucket: Optional[int] = None,
+    interleave: bool = True,
+) -> BlockSlabs:
+    """Pack A into (MB, NW, LW) slabs for the Pallas kernel.
+
+    ``interleave=True`` assigns rows to blocks by ``row mod MB`` (the paper's
+    Eq. 4 load-balancing) instead of contiguous blocks; the kernel writes its
+    C tile through the same permutation, applied by the wrapper. This evens
+    out per-slab nnz so LW (and thus padding) shrinks — measured by
+    ``padding_fraction``.
+    """
+    a = a.sorted_column_major()
+    a.validate()
+    m, k = a.shape
+    mb = cdiv(m, tm)
+    nw = cdiv(k, k0)
+
+    if interleave and mb > 1:
+        # Row permutation: new_row = (row % mb) * tm + row // mb  — PE-style
+        # mod-interleave lifted to blocks. Stored so the wrapper can undo it.
+        blk = a.row % mb
+        lrow = a.row // mb
+        eff_row = blk * tm + lrow
+    else:
+        blk = a.row // tm
+        lrow = a.row % tm
+        eff_row = a.row
+
+    win = a.col // k0
+    lcol = (a.col % k0).astype(np.int32)
+
+    # Count per (block, window) to size LW.
+    flat = blk.astype(np.int64) * nw + win
+    counts = np.bincount(flat, minlength=mb * nw).reshape(mb, nw)
+    lw_needed = int(counts.max()) if counts.size else 0
+    lw = max(chunk, cdiv(max(lw_needed, 1), chunk) * chunk)
+    if lw_bucket is not None:
+        if lw_bucket < lw:
+            raise ValueError(f"lw_bucket {lw_bucket} < required {lw}")
+        lw = lw_bucket
+
+    vals = np.zeros((mb, nw, lw), np.float32)
+    cols = np.zeros((mb, nw, lw), np.int32)
+    rows = np.zeros((mb, nw, lw), np.int32)
+
+    # Stable order within slab: column-major (paper's processing order).
+    order = np.lexsort((lrow, lcol, win, blk))
+    fb, fw = blk[order], win[order]
+    offsets = np.zeros(mb * nw + 1, np.int64)
+    np.cumsum(counts.reshape(-1), out=offsets[1:])
+    slab_id = fb.astype(np.int64) * nw + fw
+    pos_in_slab = np.arange(order.size, dtype=np.int64) - offsets[slab_id]
+    vals[fb, fw, pos_in_slab] = a.val[order]
+    cols[fb, fw, pos_in_slab] = lcol[order]
+    rows[fb, fw, pos_in_slab] = lrow[order].astype(np.int32)
+
+    q = (cdiv_arr(counts, chunk) * chunk).astype(np.int32)
+    bs = BlockSlabs(
+        m=m, k=k, tm=tm, k0=k0, chunk=chunk,
+        vals=vals, cols=cols, rows=rows, q=q, nnz=a.nnz,
+    )
+    bs.interleaved = bool(interleave and mb > 1)  # type: ignore[attr-defined]
+    return bs
+
+
+def cdiv_arr(a: np.ndarray, b: int) -> np.ndarray:
+    return -(-a // b)
+
+
+def bucket_geometry(mb: int, nw: int, lw: int, n: int) -> Tuple[int, int, int, int]:
+    """Round geometry up to power-of-two-ish buckets so distinct matrices
+    share one compiled executable (HFlex: compile once, run any SpMM)."""
+
+    def up(x: int) -> int:
+        if x <= 1:
+            return 1
+        return 1 << (x - 1).bit_length()
+
+    return up(mb), up(nw), up(lw), up(n)

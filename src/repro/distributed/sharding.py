@@ -1,0 +1,248 @@
+"""Parameter/optimizer/activation PartitionSpec inference.
+
+Rules are path-pattern driven (Megatron-style TP over the ``model`` axis,
+EP for MoE experts, vocab-parallel embeddings) and mesh-shape aware: a
+dimension is only sharded when divisible by the axis size — otherwise it
+falls back to replication (e.g. tiny smoke configs on 1 device).
+
+ZeRO-1: optimizer-state specs additionally shard the largest replicated
+dimension over the data axes, so Adam moments (and fp32 masters) never
+replicate across data — the update's reduce-scatter/all-gather pair is
+emitted by the SPMD partitioner from the specs alone.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "axis_map_for", "data_axes_of", "param_specs", "state_specs",
+    "batch_specs", "cache_specs", "named", "tree_named",
+]
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def axis_map_for(mesh: Mesh) -> Dict[str, Any]:
+    """Logical->physical map used by layers.constrain."""
+    da = data_axes_of(mesh)
+    return {"data": da if len(da) > 1 else (da[0] if da else None)}
+
+
+# (path regex, dim -> logical sharding) — dims counted from the right so the
+# stacked layer axis never shifts patterns.
+_RULES: Sequence[Tuple[str, Dict[int, str]]] = (
+    # embeddings / head: vocab-parallel
+    (r"embed$", {-2: "model"}),
+    (r"lm_head$", {-1: "model"}),
+    # attention: column-parallel qkv, row-parallel o
+    (r"attn/w[qkv]$", {-1: "model"}),
+    (r"attn/b[qkv]$", {-1: "model"}),
+    (r"attn/wo$", {-2: "model"}),
+    (r"xattn/w[qkv]$", {-1: "model"}),
+    (r"xattn/b[qkv]$", {-1: "model"}),
+    (r"xattn/wo$", {-2: "model"}),
+    # MoE experts: expert-parallel (weights are (L, E, d, f)) — must match
+    # before the dense-FFN rules below
+    (r"mlp/(wi|wg|wo)$@moe", {-3: "model"}),
+    (r"mlp/router$", {}),
+    # dense FFN: column then row
+    (r"mlp/w[ig]$", {-1: "model"}),
+    (r"mlp/wo$", {-2: "model"}),
+    (r"mlp/shared/w[ig]$", {-1: "model"}),
+    (r"mlp/shared/wo$", {-2: "model"}),
+    # mamba: inner-dim parallel
+    (r"mamba/in_proj$", {-1: "model"}),
+    (r"mamba/(conv_w|conv_b|dt_bias|d_skip)$", {-1: "model"}),
+    (r"mamba/x_proj$", {-2: "model"}),
+    (r"mamba/dt_proj$", {-1: "model"}),
+    (r"mamba/log_a$", {-2: "model"}),
+    (r"mamba/out_proj$", {-2: "model"}),
+    # mLSTM
+    (r"mlstm/up_proj$", {-1: "model"}),
+    (r"mlstm/w[qkv]$", {-1: "model"}),
+    (r"mlstm/down_proj$", {-2: "model"}),
+    # sLSTM
+    (r"slstm/w[xh]$", {-1: "model"}),
+    (r"slstm/bias$", {-1: "model"}),
+    # frontends
+    (r"(patch|frame)_proj$", {}),
+)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _spec_for(path: str, shape: Tuple[int, ...], mesh: Mesh, is_moe: bool) -> P:
+    amap = axis_map_for(mesh)
+    model_ok = "model" in mesh.axis_names
+
+    for pat, dims in _RULES:
+        moe_only = pat.endswith("@moe")
+        pat_clean = pat[:-4] if moe_only else pat
+        if moe_only and not (is_moe and len(shape) >= 4):
+            continue
+        if re.search(pat_clean, path):
+            spec = [None] * len(shape)
+            for dim, logical in dims.items():
+                d = dim % len(shape)
+                axes = amap.get(logical, logical) if logical == "data" else logical
+                size = mesh.shape.get(axes, 1) if isinstance(axes, str) else int(
+                    np.prod([mesh.shape[a] for a in axes]))
+                if model_ok and shape[d] % max(size, 1) == 0 and size > 1:
+                    spec[d] = axes
+            return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+FSDP_THRESHOLD = 1 << 23  # params above 8M elements also shard over data
+
+
+def param_specs(params_shape: Any, mesh: Mesh,
+                fsdp_threshold: Optional[int] = FSDP_THRESHOLD,
+                embed_d_shard: bool = False) -> Any:
+    """PartitionSpec pytree matching a params (shape) pytree.
+
+    Tensors larger than ``fsdp_threshold`` elements are additionally
+    sharded over the data axes on their largest remaining divisible dim
+    (FSDP/ZeRO-3 at-rest layout): the SPMD partitioner inserts the
+    per-layer all-gather inside the scan body at use, and grads come back
+    reduce-scattered into the same layout. Without this, a 235B-param MoE
+    state is only TP-sharded and overflows HBM 7x."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    has_lm_head = any(_path_str(p).endswith("lm_head") for p, _ in flat)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        is_moe = bool(re.search(r"mlp/(wi|wg|wo)$", ps)) and len(leaf.shape) >= 4
+        if embed_d_shard and has_lm_head and ps.endswith("embed"):
+            # input-only table: shard the model dim, keep the gather local
+            # (perf lever H-embed — a vocab-sharded table forces a full
+            # table all-gather per lookup)
+            msize = mesh.shape.get("model", 1)
+            spec = P(None, "model") if (msize > 1 and leaf.shape[1] % msize == 0) else P(None, None)
+        else:
+            spec = _spec_for(ps, tuple(leaf.shape), mesh, is_moe)
+        if fsdp_threshold is not None and int(np.prod(leaf.shape)) >= fsdp_threshold:
+            spec = _zero1_extend(spec, tuple(leaf.shape), mesh)
+        specs.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _zero1_extend(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard the largest still-replicated dim over the data axes."""
+    da = data_axes_of(mesh)
+    if not da:
+        return spec
+    dsize = int(np.prod([mesh.shape[a] for a in da]))
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        for a in (e if isinstance(e, tuple) else (e,)):
+            used.add(a)
+    if used & set(da):
+        return P(*entries)  # already data-sharded (FSDP rest layout)
+    best, best_sz = None, 0
+    for i, (s, dim) in enumerate(zip(entries, shape)):
+        if i == 0 and len(shape) >= 3:
+            continue  # never shard the stacked-layer axis (scan slices it)
+        if s is None and dim % dsize == 0 and dim > best_sz:
+            best, best_sz = i, dim
+    if best is None:
+        return spec
+    entries[best] = da if len(da) > 1 else da[0]
+    return P(*entries)
+
+
+def state_specs(state_shape: Any, mesh: Mesh, zero1: bool = True,
+                embed_d_shard: bool = False) -> Any:
+    """Specs for a TrainState(step, params, m, v, master)."""
+    from repro.optim.adamw import TrainState
+
+    pspecs = param_specs(state_shape.params, mesh, embed_d_shard=embed_d_shard)
+
+    def opt_spec(path_spec_shape):
+        spec, leaf = path_spec_shape
+        if not zero1:
+            return spec
+        return _zero1_extend(spec, tuple(leaf.shape), mesh)
+
+    mspec = jax.tree.map(lambda s, l: opt_spec((s, l)), pspecs, state_shape.m)
+    vspec = jax.tree.map(lambda s, l: opt_spec((s, l)), pspecs, state_shape.v)
+    master = (jax.tree.map(lambda s, l: opt_spec((s, l)), pspecs, state_shape.master)
+              if state_shape.master is not None else None)
+    return TrainState(step=P(), params=pspecs, m=mspec, v=vspec, master=master)
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Batch dicts: leading dim over the data axes (replicate if indivisible)."""
+    da = data_axes_of(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+    axes = da if len(da) > 1 else (da[0] if da else None)
+
+    def one(leaf):
+        if leaf.shape and dsize > 1 and leaf.shape[0] % dsize == 0:
+            return P(*([axes] + [None] * (len(leaf.shape) - 1)))
+        return P(*([None] * len(leaf.shape)))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh) -> Any:
+    """Decode caches: (L, B, S, ...) — B over data when divisible, S (KV
+    length) over model: the flash-decoding partition (DESIGN.md §4)."""
+    da = data_axes_of(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in da])) if da else 1
+    daxes = da if len(da) > 1 else (da[0] if da else None)
+    msize = mesh.shape.get("model", 1)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    specs = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        if ps.endswith("pos"):
+            specs.append(P(*spec))
+            continue
+        # batch dim: index 1 for stacked (L, B, ...) entries, 0 otherwise
+        bdim = 1 if len(shape) >= 2 else 0
+        if len(shape) > bdim and dsize > 1 and shape[bdim] % dsize == 0:
+            spec[bdim] = daxes
+        if re.search(r"(^|/)(k|v|xk|xv)$", ps) and len(shape) == 5:
+            if msize > 1 and shape[2] % msize == 0:
+                spec[2] = "model"          # KV sequence over model
+        elif re.search(r"ssm/h$", ps) and len(shape) == 4:
+            if msize > 1 and shape[2] % msize == 0:
+                spec[2] = "model"          # d_inner over model
+        elif re.search(r"ssm/conv$", ps) and len(shape) == 4:
+            if msize > 1 and shape[3] % msize == 0:
+                spec[3] = "model"
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec)
+
+
+def tree_named(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,156 @@
+"""Step builders: jit'd, sharded train / prefill / decode steps.
+
+The mesh + logical-axis mapping is installed *inside* the step body so the
+model's ``constrain`` calls bind during tracing; in/out shardings come from
+repro.distributed.sharding. States are donated (in-place update on device).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import model as M
+from repro.models.common import ModelConfig
+from repro.models.layers import mesh_context
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, TrainState
+
+from .sharding import (
+    axis_map_for, batch_specs, cache_specs, param_specs, state_specs, tree_named,
+)
+
+__all__ = [
+    "state_shape", "build_train_step", "build_prefill_step",
+    "build_decode_step", "init_sharded_state",
+]
+
+
+def state_shape(cfg: ModelConfig, opt: AdamWConfig, seed: int = 0):
+    params = jax.eval_shape(lambda: M.init_params(cfg, seed))
+    return jax.eval_shape(functools.partial(adamw.init_state, cfg=opt), params)
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, opt: AdamWConfig,
+                     zero1: bool = True, donate: bool = True,
+                     micro_steps: int = 1, embed_d_shard: bool = False):
+    """Returns (jit_fn, state_shardings, batch_spec_fn).
+
+    ``micro_steps > 1`` enables gradient accumulation: the global batch is
+    split into microbatches scanned sequentially, shrinking peak activation
+    memory ~linearly while keeping the same global-batch semantics (grad
+    accumulated in param dtype, averaged at the end)."""
+    amap = axis_map_for(mesh)
+    sshape = state_shape(cfg, opt)
+    sspecs = state_specs(sshape, mesh, zero1=zero1,
+                         embed_d_shard=embed_d_shard)
+    sshard = tree_named(mesh, sspecs)
+
+    from repro.models.layers import constrain
+
+    def loss_and_grads(params, batch):
+        if micro_steps == 1:
+            return jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, batch))(params)
+
+        def micro(carry, mb):
+            gacc, lacc = carry
+            mb = jax.tree.map(lambda x: constrain(
+                x, "data", *([None] * (x.ndim - 1))), mb)
+            loss, g = jax.value_and_grad(
+                lambda p: M.loss_fn(p, cfg, mb))(params)
+            gacc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), gacc, g)
+            return (gacc, lacc + loss), None
+
+        mbatch = jax.tree.map(
+            lambda x: x.reshape(micro_steps, x.shape[0] // micro_steps,
+                                *x.shape[1:]),
+            batch)
+        gz = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype), params)
+        (gsum, lsum), _ = jax.lax.scan(micro, (gz, jnp.zeros((), jnp.float32)),
+                                       mbatch)
+        inv = 1.0 / micro_steps
+        return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        with mesh_context(mesh, amap):
+            loss, grads = loss_and_grads(state.params, batch)
+            new_state = adamw.apply_updates(state, grads, cfg=opt)
+            metrics = {
+                "loss": loss.astype(jnp.float32),
+                "grad_norm": adamw.global_norm(grads),
+                "step": new_state.step,
+            }
+        return new_state, metrics
+
+    def jit_for(batch_shape):
+        bspecs = batch_specs(batch_shape, mesh)
+        return jax.jit(
+            step,
+            in_shardings=(sshard, tree_named(mesh, bspecs)),
+            out_shardings=(sshard, None),
+            donate_argnums=(0,) if donate else (),
+        )
+
+    return jit_for, sshard, sshape
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, embed_d_shard: bool = False):
+    amap = axis_map_for(mesh)
+    pshape = jax.eval_shape(lambda: M.init_params(cfg, 0))
+    pspecs = param_specs(pshape, mesh, embed_d_shard=embed_d_shard)
+    pshard = tree_named(mesh, pspecs)
+
+    def step(params, batch):
+        with mesh_context(mesh, amap):
+            logits = M.forward(params, cfg, batch, remat=False)
+        return logits
+
+    def jit_for(batch_shape):
+        bspecs = batch_specs(batch_shape, mesh)
+        return jax.jit(step, in_shardings=(pshard, tree_named(mesh, bspecs)))
+
+    return jit_for, pshard, pshape
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, donate: bool = True,
+                      embed_d_shard: bool = False):
+    amap = axis_map_for(mesh)
+    pshape = jax.eval_shape(lambda: M.init_params(cfg, 0))
+    pshard = tree_named(mesh, param_specs(pshape, mesh,
+                                          embed_d_shard=embed_d_shard))
+
+    def step(params, cache, tokens):
+        with mesh_context(mesh, amap):
+            logits, new_cache = M.decode_step(params, cfg, cache, tokens)
+        return logits, new_cache
+
+    def jit_for(cache_shape, tokens_shape):
+        cspecs = cache_specs(cache_shape, mesh)
+        cshard = tree_named(mesh, cspecs)
+        tspecs = batch_specs({"t": tokens_shape}, mesh)["t"]
+        return jax.jit(
+            step,
+            in_shardings=(pshard, cshard, tree_named(mesh, tspecs)),
+            out_shardings=(None, cshard),
+            donate_argnums=(1,) if donate else (),
+        )
+
+    return jit_for, pshard, pshape
+
+
+def init_sharded_state(cfg: ModelConfig, mesh: Mesh, opt: AdamWConfig,
+                       seed: int = 0, zero1: bool = True) -> TrainState:
+    """Materialize the train state directly into its shards (jit'd init with
+    out_shardings — no host-side full copy)."""
+    sshape = state_shape(cfg, opt, seed)
+    sshard = tree_named(mesh, state_specs(sshape, mesh, zero1=zero1))
+    fn = jax.jit(
+        lambda: adamw.init_state(M.init_params(cfg, seed), opt),
+        out_shardings=sshard,
+    )
+    return fn()

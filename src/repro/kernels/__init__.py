@@ -1,0 +1,1 @@
+from .ops import PackedSpMM, pack_for_device, sextans_spmm, BsrWeight, bsr_pack, bsr_matmul

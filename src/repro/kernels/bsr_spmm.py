@@ -1,0 +1,98 @@
+"""Block-sparse weight matmul (BSR) Pallas kernel — beyond-paper extension.
+
+The Sextans dataflow targets *unstructured* sparsity (scientific/graph
+matrices). For pruned **model weights** on TPU, the MXU strongly prefers
+block-structured sparsity: we keep the paper's two signature mechanisms —
+the HFlex pointer list (here: per-output-tile block pointers, scalar
+prefetched) and the streaming window with a resident accumulator — but the
+unit of sparsity becomes a (TK × TF) tile that feeds the MXU densely.
+
+y[bm, f_tile] = Σ_{i ∈ Q[f_tile]} x[bm, brow(i)] @ W_block(i)
+
+Layout: blocks sorted by block-column (output tile); ``indptr`` (NF+1) is
+the CSR-style pointer list over output tiles; ``brow`` gives each block's
+K-tile. Grid: (BM tiles, NF tiles); the inner fori_loop trip count is
+data-dependent via scalar prefetch — one compiled kernel serves any
+sparsity pattern of the same bucketed geometry (HFlex).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["bsr_matmul_pallas"]
+
+
+def _kernel(
+    indptr_ref,     # (NF+1,) i32 scalar prefetch
+    brow_ref,       # (NB,)   i32 scalar prefetch
+    x_ref,          # (TB, K) — full K stripe of x for this batch tile
+    blocks_ref,     # (NB, TK, TF) — all weight blocks (HBM->VMEM by index)
+    o_ref,          # (TB, TF)
+    *,
+    tk: int,
+):
+    f = pl.program_id(1)
+    start = indptr_ref[f]
+    stop = indptr_ref[f + 1]
+
+    x = x_ref[...].astype(jnp.float32)      # (TB, K)
+
+    def body(i, acc):
+        kblk = brow_ref[i]
+        xs = jax.lax.dynamic_slice_in_dim(x, kblk * tk, tk, axis=1)  # (TB, TK)
+        wb = blocks_ref[i].astype(jnp.float32)                       # (TK, TF)
+        return acc + jax.lax.dot_general(
+            xs, wb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    acc0 = jnp.zeros(o_ref.shape, jnp.float32)
+    o_ref[...] = jax.lax.fori_loop(start, stop, body, acc0).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tb", "tk", "tf", "interpret")
+)
+def bsr_matmul_pallas(
+    x: jax.Array,         # (B, K)
+    blocks: jax.Array,    # (NB, TK, TF), sorted by block-col
+    brow: jax.Array,      # (NB,) i32
+    indptr: jax.Array,    # (NF+1,) i32 pointers into blocks per out tile
+    *,
+    tb: int = 128,
+    tk: int = 128,
+    tf: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """y = x @ W for block-sparse W. x padded to (B % tb == 0, K % tk == 0);
+    output (B, NF*tf)."""
+    bsz, k = x.shape
+    nb = blocks.shape[0]
+    nf = indptr.shape[0] - 1
+    assert bsz % tb == 0 and k % tk == 0
+    assert blocks.shape[1:] == (tk, tf)
+
+    grid = (bsz // tb, nf)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, k), lambda b, f, ip, br: (b, 0)),
+            pl.BlockSpec((nb, tk, tf), lambda b, f, ip, br: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, tf), lambda b, f, ip, br: (b, f)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, tk=tk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, nf * tf), x.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+    )(indptr, brow, x, blocks)

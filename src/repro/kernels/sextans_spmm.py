@@ -1,0 +1,167 @@
+"""Sextans SpMM as a Pallas TPU kernel.
+
+TPU re-derivation of the paper's streaming dataflow (DESIGN.md §2):
+
+* the K dimension is windowed (K0); each grid step streams one B window
+  (K0 × TN) HBM→VMEM — the BRAM window of the paper;
+* the C tile (TM × TN, fp32) lives in a VMEM scratch accumulator across
+  all windows — the URAM scratchpad of the paper;
+* packed non-zero slabs (vals/cols/rows) are processed CHUNK at a time;
+  the scatter ``c[row] += val * b[col]`` is performed as a one-hot MXU
+  matmul, which reduces over the chunk axis associatively — this *is* the
+  resolution of the paper's RAW hazard on TPU (no D-cycle distance exists
+  to schedule around);
+* the per-(block, window) non-zero count matrix ``q`` is a scalar-prefetch
+  operand driving data-dependent ``fori_loop`` trip counts — the paper's
+  HFlex pointer list Q;
+* the α/β epilogue is fused into the last window step (the paper's CompC
+  module, without the extra C stream).
+
+Two gather strategies for B rows:
+
+* ``gather``  — vector row-gather from the VMEM window (dynamic-gather on
+  sublanes; supported by modern Mosaic for 32-bit element types).
+* ``onehot``  — gather as a second one-hot matmul (CHUNK × K0) @ (K0 × TN):
+  guaranteed-lowerable on any MXU, trades FLOPs for regularity.
+
+Grid: (MB, NT, NW), windows innermost so the output block and accumulator
+stay resident while K streams — the exact loop nest of paper Algorithm 1
+with (i ↔ NT, j ↔ NW, p·q ↔ intra-kernel parallelism).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sextans_spmm_pallas"]
+
+
+def _kernel(
+    q_ref,            # (MB, NW) int32, scalar prefetch (SMEM)
+    vals_ref,         # (1, 1, LW) f32
+    cols_ref,         # (1, 1, LW) i32
+    rows_ref,         # (1, 1, LW) i32
+    b_ref,            # (K0, TN)
+    cin_ref,          # (TM, TN)
+    out_ref,          # (TM, TN)
+    acc_ref,          # VMEM scratch (TM, TN) f32
+    *,
+    tm: int,
+    k0: int,
+    chunk: int,
+    nw: int,
+    alpha: float,
+    beta: float,
+    gather: str,
+):
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    m = pl.program_id(0)
+    count = q_ref[m, w]                       # real (chunk-ceiled) nnz here
+    nchunks = count // chunk
+
+    bwin = b_ref[...].astype(jnp.float32)     # (K0, TN) window, VMEM-resident
+
+    def body(ci, acc):
+        sl = pl.ds(ci * chunk, chunk)
+        v = vals_ref[0, 0, sl].astype(jnp.float32)        # (CH,)
+        c = cols_ref[0, 0, sl]                            # (CH,)
+        r = rows_ref[0, 0, sl]                            # (CH,)
+        if gather == "onehot":
+            # (CH, K0) one-hot of column ids  @  (K0, TN) window
+            oh_c = (
+                jax.lax.broadcasted_iota(jnp.int32, (chunk, k0), 1) == c[:, None]
+            ).astype(jnp.float32)
+            brows = jax.lax.dot_general(
+                oh_c, bwin, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        else:
+            brows = bwin[c, :]                            # (CH, TN) row gather
+        contrib = v[:, None] * brows                      # (CH, TN)
+        # scatter-by-row as one-hot matmul: (TM, CH) @ (CH, TN)
+        oh_r = (
+            jax.lax.broadcasted_iota(jnp.int32, (tm, chunk), 0) == r[None, :]
+        ).astype(jnp.float32)
+        return acc + jax.lax.dot_general(
+            oh_r, contrib, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    acc_ref[...] = jax.lax.fori_loop(0, nchunks, body, acc_ref[...])
+
+    @pl.when(w == nw - 1)
+    def _epilogue():
+        out_ref[...] = (
+            alpha * acc_ref[...] + beta * cin_ref[...].astype(jnp.float32)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tm", "k0", "chunk", "tn", "alpha", "beta", "gather", "interpret"),
+)
+def sextans_spmm_pallas(
+    vals: jax.Array,      # (MB, NW, LW) f32
+    cols: jax.Array,      # (MB, NW, LW) i32
+    rows: jax.Array,      # (MB, NW, LW) i32
+    q: jax.Array,         # (MB, NW) i32
+    b: jax.Array,         # (NW*K0, N_pad)
+    c_in: jax.Array,      # (MB*TM, N_pad)
+    *,
+    tm: int,
+    k0: int,
+    chunk: int,
+    tn: int = 128,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    gather: str = "gather",
+    interpret: bool = True,
+) -> jax.Array:
+    """Raw kernel entry on pre-padded operands. Use ops.sextans_spmm for the
+    user-facing API (handles packing, padding, permutation)."""
+    mb, nw, lw = vals.shape
+    kpad, npad = b.shape
+    assert kpad == nw * k0, (kpad, nw, k0)
+    assert c_in.shape == (mb * tm, npad)
+    assert npad % tn == 0
+    nt = npad // tn
+
+    kern = functools.partial(
+        _kernel,
+        tm=tm, k0=k0, chunk=chunk, nw=nw,
+        alpha=float(alpha), beta=float(beta), gather=gather,
+    )
+    grid = (mb, nt, nw)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, lw), lambda m, n, w, q_: (m, w, 0)),
+            pl.BlockSpec((1, 1, lw), lambda m, n, w, q_: (m, w, 0)),
+            pl.BlockSpec((1, 1, lw), lambda m, n, w, q_: (m, w, 0)),
+            pl.BlockSpec((k0, tn), lambda m, n, w, q_: (w, n)),
+            pl.BlockSpec((tm, tn), lambda m, n, w, q_: (m, n)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda m, n, w, q_: (m, n)),
+        scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mb * tm, npad), b.dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+    )(q, vals, cols, rows, b, c_in)

@@ -1,0 +1,423 @@
+"""Loop-aware HLO analysis: trip-count-weighted FLOPs, HBM bytes, and
+collective wire bytes from post-optimization HLO text.
+
+Why: ``compiled.cost_analysis()`` counts each while-loop *body once* —
+under scan-over-layers (and chunked-attention scans) it undercounts FLOPs
+by ~num_layers×. XLA records ``backend_config={"known_trip_count":{"n":N}}``
+on while ops, so an exact reconstruction is possible:
+
+1. split the module into computations; symbol-table every op's result type;
+2. propagate call multiplicity from ENTRY (while bodies × trip count,
+   fusions/calls × 1, conditional branches × 1 each — upper bound);
+3. FLOPs: 2 · prod(result dims) · prod(contracting dims) per dot;
+4. HBM bytes: operand+result bytes of every *fusion-boundary* op (ops
+   inside fused computations move registers, not HBM);
+5. collectives: ring-model wire bytes (see roofline.py) × multiplicity.
+
+This is the profiling substrate for §Roofline / §Perf — the dry-run's
+equivalent of a trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+__all__ = ["HloOp", "HloModule", "parse_module", "analyze"]
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<rest>.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*?(\d+)')
+_CALL_SINGLE_RE = re.compile(r"(?:condition|body|calls|to_apply)=%?([\w\.\-]+)")
+_CALL_MULTI_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _call_targets(attrs: str) -> List[str]:
+    out = list(_CALL_SINGLE_RE.findall(attrs))
+    for m in _CALL_MULTI_RE.finditer(attrs):
+        out.extend(re.findall(r"[\w\.\-]+", m.group(1)))
+    return out
+
+_DATA_FREE = {
+    "tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+    "after-all", "opt-barrier", "partition-id", "replica-id", "iota",
+}
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _op_hbm_bytes(op: "HloOp", symtab: Dict[str, str]) -> int:
+    """HBM traffic of one fusion-boundary op.
+
+    Sliced-access ops only touch the slice, not the whole operand —
+    counting operand sizes naively inflates decode-cache workloads by the
+    cache/slice ratio (a 64-layer scan reading one layer's KV per step is
+    64x overcounted otherwise)."""
+    oc = op.opcode
+    if oc == "dynamic-slice":
+        return 2 * _type_bytes(op.type_str)            # read slice + write
+    if oc == "dynamic-update-slice":
+        operands = _OPERAND_RE.findall(op.args)
+        upd = _type_bytes(symtab.get(operands[1], "")) if len(operands) > 1 else 0
+        return 2 * upd                                  # read update + write region
+    if oc in ("gather", "scatter"):
+        # result/update + indices; the table itself is touched sparsely
+        operands = _OPERAND_RE.findall(op.args)
+        idx = sum(_type_bytes(symtab.get(o, "")) for o in operands[1:])
+        return 2 * _type_bytes(op.type_str) + idx
+    if oc in ("slice", "broadcast", "reshape", "transpose", "copy",
+              "convert", "reverse", "concatenate", "pad"):
+        # layout/shape ops: read result-sized data once, write once
+        return 2 * _type_bytes(op.type_str)
+    b = _type_bytes(op.type_str)
+    for operand in _OPERAND_RE.findall(op.args):
+        b += _type_bytes(symtab.get(operand, ""))
+    return b
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_type(rest: str) -> Tuple[str, str]:
+    """Split '<type> <opcode>(...)...' -> (type_str, remainder)."""
+    rest = rest.strip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[: i + 1], rest[i + 1:].strip()
+        return rest, ""
+    m = re.match(r"^([a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s*(.*)$", rest)
+    if m:
+        return m.group(1), m.group(2)
+    # scalar like 'f32[]' handled above (empty dims); 'pred[]' too
+    parts = rest.split(None, 1)
+    return parts[0], parts[1] if len(parts) > 1 else ""
+
+
+@dataclasses.dataclass
+class HloOp:
+    name: str
+    type_str: str
+    opcode: str
+    args: str
+    attrs: str
+
+
+@dataclasses.dataclass
+class HloModule:
+    computations: Dict[str, List[HloOp]]
+    entry: str
+    fusion_internal: set
+
+
+def parse_module(text: str) -> HloModule:
+    comps: Dict[str, List[HloOp]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        type_str, rest = _split_type(m.group("rest"))
+        om = re.match(r"^([\w\-]+)\(", rest)
+        if not om:
+            continue
+        opcode = om.group(1)
+        # split args vs attrs at matching close paren
+        depth = 0
+        args_end = len(rest)
+        for i in range(len(opcode), len(rest)):
+            ch = rest[i]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args_end = i
+                    break
+        args = rest[len(opcode) + 1: args_end]
+        attrs = rest[args_end + 1:]
+        comps[cur].append(HloOp(m.group("name"), type_str, opcode, args, attrs))
+
+    # fusion-internal computations
+    internal = set()
+    for ops in comps.values():
+        for op in ops:
+            if op.opcode in ("fusion", "reduce", "reduce-window", "map",
+                             "scatter", "select-and-scatter", "sort",
+                             "all-reduce", "reduce-scatter"):
+                for name in _call_targets(op.attrs):
+                    internal.add(name)
+    return HloModule(comps, entry, internal)
+
+
+def _multiplicities(mod: HloModule) -> Dict[str, float]:
+    """Execution count per computation: sum over call sites along the call
+    DAG (a body called from two places runs for both), while bodies
+    multiplied by their known trip count."""
+    mult: Dict[str, float] = {name: 0.0 for name in mod.computations}
+    if mod.entry not in mod.computations:
+        return mult
+
+    # call edges with factors
+    edges: Dict[str, List[Tuple[str, float]]] = {n: [] for n in mod.computations}
+    indeg: Dict[str, int] = {n: 0 for n in mod.computations}
+    for cname, ops in mod.computations.items():
+        for op in ops:
+            factor = 1.0
+            if op.opcode == "while":
+                tm = _TRIP_RE.search(op.attrs)
+                factor = float(int(tm.group(1))) if tm else 1.0
+            for target in _call_targets(op.attrs):
+                if target in mult:
+                    edges[cname].append((target, factor))
+                    indeg[target] += 1
+
+    mult[mod.entry] = 1.0
+    # Kahn topological propagation from the entry
+    from collections import deque
+
+    q = deque(n for n, d in indeg.items() if d == 0)
+    while q:
+        c = q.popleft()
+        for target, factor in edges[c]:
+            mult[target] += mult[c] * factor
+            indeg[target] -= 1
+            if indeg[target] == 0:
+                q.append(target)
+    return mult
+
+
+def _dot_flops(op: HloOp, symtab: Dict[str, str]) -> float:
+    result_elems = 1
+    shapes = _SHAPE_RE.findall(op.type_str)
+    if not shapes:
+        return 0.0
+    dt, dims = shapes[0]
+    for d in dims.split(","):
+        if d:
+            result_elems *= int(d)
+    # contracting size from lhs operand type
+    operands = _OPERAND_RE.findall(op.args)
+    if not operands:
+        return 0.0
+    lhs_type = symtab.get(operands[0], "")
+    lm = _SHAPE_RE.search(lhs_type)
+    if not lm:
+        return 0.0
+    lhs_dims = [int(d) for d in lm.group(2).split(",") if d]
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+    contract = 1
+    if cm and cm.group(1):
+        for idx in cm.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * result_elems * contract
+
+
+def _loop_invariant_names(mod: HloModule) -> Dict[str, set]:
+    """Per while-body computation: names of get-tuple-element values that the
+    body passes through unchanged (loop-invariant carries — weights, lookup
+    tables, KV caches read-only in the loop).
+
+    On TPU these buffers stay resident (VMEM or at worst are read once from
+    HBM and cached); charging their bytes once per trip inflates sequential
+    workloads (an sLSTM re-"reads" its recurrent weight every timestep in
+    HLO terms but not in HBM terms)."""
+    bodies: Dict[str, set] = {}
+    # find while ops -> body computation name
+    body_names = set()
+    for ops in mod.computations.values():
+        for op in ops:
+            if op.opcode == "while":
+                for t in _call_targets(op.attrs):
+                    body_names.add(t)
+    for bname in body_names:
+        ops = mod.computations.get(bname)
+        if not ops:
+            continue
+        # map: gte index -> op name, for gtes of the body parameter
+        param_names = {op.name for op in ops if op.opcode == "parameter"}
+        gte_idx: Dict[str, int] = {}
+        for op in ops:
+            if op.opcode == "get-tuple-element":
+                operands = _OPERAND_RE.findall(op.args)
+                im = re.search(r"index=(\d+)", op.attrs)
+                if operands and operands[0] in param_names and im:
+                    gte_idx[op.name] = int(im.group(1))
+        # root tuple: last op (ROOT) with opcode tuple
+        root = ops[-1]
+        invariant: set = set()
+        if root.opcode == "tuple":
+            elems = _OPERAND_RE.findall(root.args)
+            for pos, elem in enumerate(elems):
+                if gte_idx.get(elem) == pos:
+                    invariant.add(elem)
+        bodies[bname] = invariant
+    return bodies
+
+
+def analyze(text: str, pod_boundary: Optional[int] = None) -> Dict[str, object]:
+    """Trip-count-aware totals for one per-device HLO module."""
+    from repro.launch.roofline import CollectiveStats, _group_size_and_crosspod
+
+    mod = parse_module(text)
+    mult = _multiplicities(mod)
+    invariants = _loop_invariant_names(mod)
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll = CollectiveStats()
+    flops_by_comp: Dict[str, float] = {}
+
+    for cname, ops in mod.computations.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symtab = {op.name: op.type_str for op in ops}
+        inv = invariants.get(cname, set())
+        boundary = cname not in mod.fusion_internal
+        for op in ops:
+            # async collectives appear as <op>-start / <op>-done pairs
+            if op.opcode.endswith("-done"):
+                continue
+            if op.opcode.endswith("-start"):
+                op = dataclasses.replace(op, opcode=op.opcode[:-6])
+            if op.opcode in ("dot", "dot-general"):
+                f = _dot_flops(op, symtab) * m
+                flops += f
+                flops_by_comp[cname] = flops_by_comp.get(cname, 0.0) + f
+            if boundary and op.opcode not in _DATA_FREE:
+                full = _op_hbm_bytes(op, symtab)
+                if inv:
+                    # loop-invariant operands: charge once, not per trip
+                    inv_b = sum(_type_bytes(symtab.get(o, ""))
+                                for o in _OPERAND_RE.findall(op.args)
+                                if o in inv)
+                    inv_b = min(inv_b, full)
+                    hbm_bytes += (full - inv_b) * m + inv_b
+                else:
+                    hbm_bytes += full * m
+            if op.opcode in _COLLECTIVES:
+                size = _type_bytes(op.type_str)
+                line = f"replica_groups placeholder {op.attrs}"
+                gsize, cross = _group_size_and_crosspod(op.attrs, pod_boundary)
+                if gsize <= 1:
+                    continue
+                if op.opcode == "all-reduce":
+                    wire = 2.0 * size * (gsize - 1) / gsize
+                elif op.opcode == "collective-permute":
+                    wire = float(size)
+                else:
+                    wire = size * (gsize - 1) / gsize
+                coll.wire_bytes += wire * m
+                if cross:
+                    coll.cross_pod_bytes += wire * m
+                coll.counts[op.opcode] = coll.counts.get(op.opcode, 0) + 1
+                coll.bytes_by_op[op.opcode] = (
+                    coll.bytes_by_op.get(op.opcode, 0.0) + wire * m)
+
+    top = sorted(flops_by_comp.items(), key=lambda kv: -kv[1])[:8]
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collectives": coll,
+        "flops_top_computations": top,
+    }
+
+
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+_SCOPE_TOKENS = (
+    "attention", "chunked_attention", "moe", "mamba", "mlstm", "slstm",
+    "ffn", "embed", "logsumexp", "lm_head", "rmsnorm", "rope", "adamw",
+    "apply_updates", "transpose",
+)
+
+
+def _scope_of(attrs: str) -> str:
+    m = _META_RE.search(attrs)
+    if not m:
+        return "other"
+    name = m.group(1)
+    grad = "transpose(" in name or "/jvp(" in name and "transpose" in name
+    for tok in ("chunked_attention", "moe", "mamba", "mlstm", "slstm",
+                "attention", "ffn", "logsumexp", "embed", "apply_updates",
+                "rmsnorm", "rope"):
+        if tok in name:
+            return f"{tok}{'~bwd' if grad else ''}"
+    return "other~bwd" if grad else "other"
+
+
+def attribute_by_scope(text: str) -> Dict[str, Dict[str, float]]:
+    """Aggregate trip-weighted FLOPs and HBM bytes by JAX source scope
+    (from op_name metadata) — the dry-run's substitute for a profile's
+    per-op table. Returns {scope: {"flops": f, "bytes": b}}."""
+    mod = parse_module(text)
+    mult = _multiplicities(mod)
+    invariants = _loop_invariant_names(mod)
+    agg: Dict[str, Dict[str, float]] = {}
+    for cname, ops in mod.computations.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symtab = {op.name: op.type_str for op in ops}
+        inv = invariants.get(cname, set())
+        boundary = cname not in mod.fusion_internal
+        for op in ops:
+            if op.opcode.endswith("-done"):
+                continue
+            scope = _scope_of(op.attrs)
+            ent = agg.setdefault(scope, {"flops": 0.0, "bytes": 0.0})
+            if op.opcode in ("dot", "dot-general"):
+                ent["flops"] += _dot_flops(op, symtab) * m
+            if boundary and op.opcode not in _DATA_FREE:
+                full = _op_hbm_bytes(op, symtab)
+                if inv:
+                    inv_b = min(full, sum(
+                        _type_bytes(symtab.get(o, ""))
+                        for o in _OPERAND_RE.findall(op.args) if o in inv))
+                    ent["bytes"] += (full - inv_b) * m + inv_b
+                else:
+                    ent["bytes"] += full * m
+    return agg

@@ -1,0 +1,458 @@
+"""Model assembly: block definitions, scan-over-layers stacks, language
+models (decoder-only and encoder-decoder), modality frontends (stubs),
+losses, and KV/state caches for serving.
+
+One block body is compiled regardless of depth (``lax.scan`` over stacked
+layer params); heterogeneous stacks (xLSTM) carry union params plus a
+static per-layer type vector driving ``lax.cond``/``lax.switch``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ssm
+from .common import Initializer, ModelConfig, compute_dtype, param_dtype
+from .layers import (
+    attention_apply, attention_init, constrain, cross_kv, decode_attention_apply,
+    ffn_apply, ffn_init, moe_apply, moe_init, rmsnorm, rmsnorm_init,
+)
+
+__all__ = [
+    "init_params", "forward", "loss_fn", "init_cache", "decode_step",
+    "encode", "layer_windows",
+]
+
+IGNORE_LABEL = -1
+
+
+# ---------------------------------------------------------------------------
+# per-layer structure
+# ---------------------------------------------------------------------------
+
+
+def _block_init(init: Initializer, cfg: ModelConfig, kind: str, cross: bool = False) -> Dict[str, Any]:
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": rmsnorm_init(init, d)}
+    if kind in ("attn", "swa", "hymba"):
+        p["attn"] = attention_init(init, cfg)
+    if kind in ("mamba", "hymba"):
+        p["mamba"] = ssm.mamba_init(init, cfg)
+    if kind == "xlstm":
+        p["mlstm"] = ssm.mlstm_init(init, cfg)
+        p["slstm"] = ssm.slstm_init(init, cfg)
+    if cross:
+        p["lnx"] = rmsnorm_init(init, d)
+        p["xattn"] = attention_init(init, cfg)
+    if cfg.d_ff and kind != "xlstm":
+        p["ln2"] = rmsnorm_init(init, d)
+        if cfg.num_experts:
+            p["mlp"] = moe_init(init, cfg)
+        else:
+            p["mlp"] = ffn_init(init, d, cfg.d_ff)
+    return p
+
+
+def _stack_layers(cfg: ModelConfig, seed: int, kind_for_layer, n_layers: int, cross: bool = False):
+    """Initialize per-layer params and stack along a leading layer axis."""
+    dtype = param_dtype(cfg)
+    layers = []
+    for i in range(n_layers):
+        init = Initializer(seed * 1000 + i, dtype)
+        layers.append(_block_init(init, cfg, kind_for_layer(i), cross))
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full attention). hymba uses sliding
+    windows everywhere except the first / middle / last layer (global)."""
+    l = cfg.num_layers
+    win = np.zeros(l, np.int32)
+    for i, t in enumerate(cfg.types):
+        if t == "swa":
+            win[i] = cfg.sliding_window
+        elif t == "hymba":
+            win[i] = 0 if i in (0, l // 2, l - 1) else cfg.sliding_window
+    return win
+
+
+def _uniform_kind(cfg: ModelConfig) -> str:
+    kinds = set()
+    for t in cfg.types:
+        if t in ("mlstm", "slstm"):
+            kinds.add("xlstm")
+        elif t in ("attn", "swa"):
+            kinds.add("attn")
+        else:
+            kinds.add(t)
+    if len(kinds) != 1:
+        raise ValueError(f"non-uniform layer kinds {kinds}")
+    return kinds.pop()
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, Any]:
+    dtype = param_dtype(cfg)
+    init = Initializer(seed, dtype)
+    vp = cfg.vocab_padded
+    params: Dict[str, Any] = {
+        "embed": init.embed(vp, cfg.d_model),
+        "final_ln": rmsnorm_init(init, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = init.dense(cfg.d_model, vp, scale=0.02)
+    kind = _uniform_kind(cfg)
+    params["layers"] = _stack_layers(
+        cfg, seed + 1, lambda i: kind, cfg.num_layers,
+        cross=cfg.is_encoder_decoder,
+    )
+    if cfg.is_encoder_decoder:
+        params["enc_layers"] = _stack_layers(
+            cfg, seed + 2, lambda i: "attn", cfg.num_encoder_layers)
+        params["enc_ln"] = rmsnorm_init(init, cfg.d_model)
+    if cfg.frontend == "vision_stub":
+        params["patch_proj"] = init.dense(cfg.frontend_dim, cfg.d_model)
+    elif cfg.frontend == "audio_stub":
+        params["frame_proj"] = init.dense(cfg.frontend_dim, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _norm_window(window, cfg: ModelConfig):
+    """window is a static python int (segmented stacks; 0 = full) or a
+    traced per-layer scalar (uniform scan)."""
+    if isinstance(window, (int, np.integer)):
+        return None if int(window) == 0 else int(window)
+    w = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+    return w if _maybe_windowed(cfg) else None
+
+
+def _apply_mixer(p, cfg: ModelConfig, kind: str, x, positions, window, type_id):
+    """Sequence-mixing part of a block on the ln1-normalized input."""
+    if kind == "attn":
+        return attention_apply(p["attn"], cfg, x, positions, causal=True,
+                               window=_norm_window(window, cfg))
+    if kind == "mamba":
+        return ssm.mamba_apply(p["mamba"], cfg, x)
+    if kind == "hymba":
+        if isinstance(window, (int, np.integer)):
+            w = None if int(window) == 0 else int(window)
+        else:
+            w = jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max)
+        a = attention_apply(p["attn"], cfg, x, positions, causal=True, window=w)
+        m = ssm.mamba_apply(p["mamba"], cfg, x)
+        return 0.5 * (a + m)
+    if kind == "xlstm":
+        return jax.lax.cond(
+            type_id == 0,
+            lambda xx: ssm.mlstm_apply(p["mlstm"], cfg, xx,
+                                       chunk=cfg.mlstm_chunk),
+            lambda xx: ssm.slstm_apply(p["slstm"], cfg, xx),
+            x,
+        )
+    raise ValueError(kind)
+
+
+def _maybe_windowed(cfg: ModelConfig) -> bool:
+    return any(t in ("swa", "hymba") for t in cfg.types)
+
+
+def _block_apply(p, cfg: ModelConfig, kind: str, x, positions, window, type_id,
+                 enc_out=None):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = x + _apply_mixer(p, cfg, kind, h, positions, window, type_id)
+    if enc_out is not None:
+        h = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        kv = cross_kv(p["xattn"], cfg, enc_out)
+        x = x + attention_apply(p["xattn"], cfg, h, positions, causal=False,
+                                kv_override=kv)
+    if "mlp" in p:
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.num_experts:
+            x = x + moe_apply(p["mlp"], cfg, h)
+        else:
+            x = x + ffn_apply(p["mlp"], cfg, h)
+    return x
+
+
+def _run_stack(stacked, cfg: ModelConfig, kind: str, x, positions,
+               windows, type_ids, enc_out=None, remat: bool = True):
+    def block(carry, lp, win, tid):
+        return _block_apply(lp, cfg, kind, carry, positions, win, tid,
+                            enc_out=enc_out)
+
+    if remat:
+        if cfg.remat_policy == "dots":
+            # keep matmul outputs, recompute elementwise (perf lever H-remat)
+            fn = jax.checkpoint(
+                block,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        else:
+            fn = jax.checkpoint(block)
+    else:
+        fn = block
+
+    windows_np = np.asarray(windows)
+    want_static_windows = (cfg.attn_skip_masked_blocks or cfg.sp_attention)
+    if want_static_windows and len(set(windows_np.tolist())) > 1:
+        # Segmented stack (perf lever H-seg): contiguous runs of layers with
+        # equal window run as one scan each, singletons unroll — the window
+        # becomes a *static* int, unlocking out-of-window block skipping and
+        # SWA slab attention inside each segment.
+        segs = []
+        lo = 0
+        for i in range(1, len(windows_np) + 1):
+            if i == len(windows_np) or windows_np[i] != windows_np[lo]:
+                segs.append((lo, i, int(windows_np[lo])))
+                lo = i
+        tids = np.asarray(type_ids)
+        for (lo, hi, w) in segs:
+            seg = jax.tree.map(lambda a: a[lo:hi], stacked)
+            if hi - lo == 1:
+                lp = jax.tree.map(lambda a: a[0], seg)
+                x = fn(x, lp, w, jnp.asarray(tids[lo]))
+            else:
+                seg_t = jnp.asarray(tids[lo:hi])
+
+                def stepw(carry, xs, _w=w):
+                    lp, tid = xs
+                    return fn(carry, lp, _w, tid), None
+
+                x, _ = jax.lax.scan(stepw, x, (seg, seg_t))
+        return x
+
+    def step(carry, xs):
+        lp, win, tid = xs
+        return fn(carry, lp, win, tid), None
+
+    xs = (stacked, jnp.asarray(windows), jnp.asarray(type_ids))
+    out, _ = jax.lax.scan(step, x, xs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embeddings / frontends
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens: jax.Array) -> jax.Array:
+    dtype = compute_dtype(cfg)
+    emb = params["embed"]
+    # vocab is model-axis sharded: one-hot matmul keeps the gather local +
+    # reduces over the sharded vocab axis (XLA emits the standard
+    # all-reduce); plain take would all-gather the table.
+    x = jnp.take(emb, tokens, axis=0).astype(dtype)
+    return constrain(x, "data", None, None)
+
+
+def _frontend_embeds(params, cfg: ModelConfig, batch) -> Optional[jax.Array]:
+    dtype = compute_dtype(cfg)
+    if cfg.frontend == "vision_stub" and "patches" in batch:
+        return jnp.dot(batch["patches"].astype(dtype),
+                       params["patch_proj"].astype(dtype))
+    if cfg.frontend == "audio_stub" and "frames" in batch:
+        return jnp.dot(batch["frames"].astype(dtype),
+                       params["frame_proj"].astype(dtype))
+    return None
+
+
+def encode(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Bidirectional encoder stack on stubbed frontend embeddings."""
+    fe = _frontend_embeds(params, cfg, batch)
+    assert fe is not None, "encoder needs frontend embeddings"
+    return _run_encoder(params, cfg, constrain(fe, "data", None, None))
+
+
+def _run_encoder(params, cfg, fe):
+    positions = jnp.arange(fe.shape[1], dtype=jnp.int32)
+
+    def block(carry, lp):
+        h = rmsnorm(lp["ln1"], carry, cfg.norm_eps)
+        a = attention_apply(lp["attn"], cfg, h, positions, causal=False)
+        x = carry + a
+        h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        return x + ffn_apply(lp["mlp"], cfg, h)
+
+    fn = jax.checkpoint(block)
+    out, _ = jax.lax.scan(lambda c, lp: (fn(c, lp), None), fe,
+                          params["enc_layers"])
+    return rmsnorm(params["enc_ln"], out, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _type_ids(cfg: ModelConfig) -> np.ndarray:
+    return np.array([1 if t == "slstm" else 0 for t in cfg.types], np.int32)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: bool = True) -> jax.Array:
+    """Full-sequence forward -> logits (B, S, vocab_padded)."""
+    tokens = batch["tokens"]
+    b, s_text = tokens.shape
+    x = _embed_tokens(params, cfg, tokens)
+
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        fe = _frontend_embeds(params, cfg, batch)
+        enc_out = _run_encoder(params, cfg, fe)
+    elif cfg.frontend != "none":
+        fe = _frontend_embeds(params, cfg, batch)
+        if fe is not None:
+            x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    kind = _uniform_kind(cfg)
+    x = _run_stack(params["layers"], cfg, kind, x, positions,
+                   layer_windows(cfg), _type_ids(cfg), enc_out=enc_out,
+                   remat=remat)
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    dtype = compute_dtype(cfg)
+    logits = jnp.dot(x.astype(dtype), head.astype(dtype))
+    return constrain(logits, "data", None, "model")
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Mean next-token cross-entropy over non-ignored labels."""
+    logits = forward(params, cfg, batch)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:
+        # frontend prepended positions carry no labels
+        pad = logits.shape[1] - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((labels.shape[0], pad), IGNORE_LABEL, labels.dtype), labels],
+            axis=1)
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels != IGNORE_LABEL).astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: caches + single-token decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, smax: int,
+               enc_len: int = 0) -> Dict[str, Any]:
+    """Allocate the decode cache for one stack of layers."""
+    dtype = compute_dtype(cfg)
+    l = cfg.num_layers
+    cache: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    kinds = set(cfg.types)
+    if kinds & {"attn", "swa", "hymba"}:
+        cache["k"] = jnp.zeros((l, batch, smax, cfg.num_kv_heads, cfg.hd), dtype)
+        cache["v"] = jnp.zeros((l, batch, smax, cfg.num_kv_heads, cfg.hd), dtype)
+    if kinds & {"mamba", "hymba"}:
+        st = ssm.mamba_init_state(cfg, batch, dtype)
+        cache["ssm"] = jax.tree.map(lambda a: jnp.tile(a[None], (l,) + (1,) * a.ndim), st)
+    if kinds & {"mlstm", "slstm"}:
+        stm = ssm.mlstm_init_state(cfg, batch, dtype)
+        sts = ssm.slstm_init_state(cfg, batch, dtype)
+        cache["mlstm"] = jax.tree.map(lambda a: jnp.tile(a[None], (l,) + (1,) * a.ndim), stm)
+        cache["slstm"] = jax.tree.map(lambda a: jnp.tile(a[None], (l,) + (1,) * a.ndim), sts)
+    if cfg.is_encoder_decoder:
+        cache["xk"] = jnp.zeros((l, batch, enc_len, cfg.num_kv_heads, cfg.hd), dtype)
+        cache["xv"] = jnp.zeros((l, batch, enc_len, cfg.num_kv_heads, cfg.hd), dtype)
+    return cache
+
+
+def precompute_cross_cache(params, cfg: ModelConfig, enc_out: jax.Array, cache):
+    """Fill per-layer cross-attention KV from encoder output."""
+    def per_layer(lp):
+        return cross_kv(lp["xattn"], cfg, enc_out)
+
+    xk, xv = jax.lax.map(per_layer, params["layers"])
+    cache = dict(cache)
+    cache["xk"], cache["xv"] = xk, xv
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache: Dict[str, Any],
+                tokens: jax.Array) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One token for every sequence in the batch. tokens: (B, 1)."""
+    dtype = compute_dtype(cfg)
+    b = tokens.shape[0]
+    x = _embed_tokens(params, cfg, tokens)
+    pos = cache["pos"]
+    kind = _uniform_kind(cfg)
+    windows = jnp.asarray(layer_windows(cfg))
+    type_ids = jnp.asarray(_type_ids(cfg))
+
+    def step(carry, xs):
+        x = carry
+        lp, li = xs
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        new_cache_entries = {}
+        if kind in ("attn", "hymba"):
+            win = windows[li]
+            wval = jnp.where(win > 0, win, jnp.iinfo(jnp.int32).max)
+            a, k_new, v_new = decode_attention_apply(
+                lp["attn"], cfg, h, pos, cache["k"][li], cache["v"][li],
+                window=wval)
+            new_cache_entries["k"] = k_new
+            new_cache_entries["v"] = v_new
+            mix = a
+        if kind == "hymba":
+            st = jax.tree.map(lambda c: c[li], cache["ssm"])
+            mo, st2 = ssm.mamba_step(lp["mamba"], cfg, h, st)
+            new_cache_entries["ssm"] = st2
+            mix = 0.5 * (mix + mo)
+        elif kind == "mamba":
+            st = jax.tree.map(lambda c: c[li], cache["ssm"])
+            mix, st2 = ssm.mamba_step(lp["mamba"], cfg, h, st)
+            new_cache_entries["ssm"] = st2
+        elif kind == "xlstm":
+            stm = jax.tree.map(lambda c: c[li], cache["mlstm"])
+            sts = jax.tree.map(lambda c: c[li], cache["slstm"])
+            mix_m, stm2 = ssm.mlstm_step(lp["mlstm"], cfg, h, stm)
+            mix_s, sts2 = ssm.slstm_step(lp["slstm"], cfg, h, sts)
+            mix = jnp.where(type_ids[li] == 0, mix_m, mix_s)
+            new_cache_entries["mlstm"] = stm2
+            new_cache_entries["slstm"] = sts2
+        x = x + mix
+        if cfg.is_encoder_decoder:
+            h = rmsnorm(lp["lnx"], x, cfg.norm_eps)
+            a, _, _ = decode_attention_apply(
+                lp["xattn"], cfg, h, pos, cache["xk"][li], cache["xv"][li],
+                update_cache=False,
+                kv_override=(cache["xk"][li], cache["xv"][li]))
+            x = x + a
+        if "mlp" in lp:
+            h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+            if cfg.num_experts:
+                x = x + moe_apply(lp["mlp"], cfg, h)
+            else:
+                x = x + ffn_apply(lp["mlp"], cfg, h)
+        return x, new_cache_entries
+
+    lidx = jnp.arange(cfg.num_layers, dtype=jnp.int32)
+    x, new_entries = jax.lax.scan(step, x, (params["layers"], lidx))
+    new_cache = dict(cache)
+    for key_ in ("k", "v"):
+        if key_ in new_entries:
+            new_cache[key_] = new_entries[key_]
+    for key_ in ("ssm", "mlstm", "slstm"):
+        if key_ in new_entries:
+            new_cache[key_] = new_entries[key_]
+    new_cache["pos"] = pos + 1
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.dot(x.astype(dtype), head.astype(dtype))
+    return logits, new_cache

@@ -1,0 +1,355 @@
+"""Recurrent sequence mixers: selective SSM (Mamba-style, for hymba),
+mLSTM (chunkwise-parallel) and sLSTM (sequential) for xLSTM.
+
+All three expose:
+  *_init(init, cfg)                       -> params
+  *_apply(p, cfg, x)                      -> y           (full sequence)
+  *_step(p, cfg, x_t, state)              -> y_t, state  (single decode step)
+  *_init_state(cfg, batch, dtype)         -> state
+
+The mLSTM parallel form is chunkwise (intra-chunk quadratic with decay,
+inter-chunk state scan) — the TPU-native formulation of linear attention;
+tests validate it against the sequential recurrence oracle.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import Initializer, ModelConfig, compute_dtype
+from .layers import _scoped, constrain
+
+__all__ = [
+    "mamba_init", "mamba_apply", "mamba_step", "mamba_init_state",
+    "mlstm_init", "mlstm_apply", "mlstm_step", "mlstm_init_state",
+    "slstm_init", "slstm_apply", "slstm_step", "slstm_init_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM
+# ---------------------------------------------------------------------------
+
+
+def mamba_init(init: Initializer, cfg: ModelConfig) -> Dict[str, Any]:
+    d, di, n, r, cw = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank, cfg.ssm_conv
+    a_init = jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1)))
+    return {
+        "in_proj": init.dense(d, 2 * di),
+        "conv_w": init.dense(cw, di, scale=1.0 / math.sqrt(cw)),
+        "conv_b": init.zeros(di),
+        "x_proj": init.dense(di, r + 2 * n),
+        "dt_proj": init.dense(r, di, scale=1.0 / math.sqrt(r)),
+        "dt_bias": init.zeros(di),
+        "log_a": a_init.astype(init.dtype),        # A = -exp(log_a): (di, n)
+        "d_skip": init.ones(di),
+        "out_proj": init.dense(di, d),
+    }
+
+
+def _mamba_inner(p, cfg, xz, conv_state=None):
+    """Shared projection/conv/gating pieces. xz: (B, S, 2*di)."""
+    di, n, r = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    x, z = jnp.split(xz, 2, axis=-1)
+    cw = cfg.ssm_conv
+    if conv_state is None:
+        xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    # depthwise causal conv: windows (B, S, cw, di) dot kernel (cw, di)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(cw)[None, :]
+    xw = xp[:, idx]                                    # (B, S, cw, di)
+    xc = jnp.einsum("bscd,cd->bsd", xw, p["conv_w"].astype(x.dtype))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))
+    proj = jnp.dot(xc, p["x_proj"].astype(x.dtype))    # (B, S, r+2n)
+    dt_r, b_, c_ = jnp.split(proj, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(jnp.dot(dt_r, p["dt_proj"].astype(x.dtype))
+                         + p["dt_bias"].astype(x.dtype))   # (B, S, di)
+    new_conv_state = xp[:, -(cw - 1):] if cw > 1 else None
+    return xc, z, dt, b_, c_, new_conv_state
+
+
+@_scoped("mamba")
+def mamba_apply(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dtype = compute_dtype(cfg)
+    b, s, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    xz = jnp.dot(x.astype(dtype), p["in_proj"].astype(dtype))
+    xz = constrain(xz, "data", None, "model")
+    xc, z, dt, b_, c_, _ = _mamba_inner(p, cfg, xz)
+    a = -jnp.exp(p["log_a"].astype(jnp.float32))                   # (di, n)
+    # discretize: decay (B,S,di,n), drive (B,S,di,n)
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)
+    drive = (dt * xc).astype(jnp.float32)[..., None] * b_.astype(jnp.float32)[:, :, None, :]
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_.astype(jnp.float32)).astype(dtype)
+    y = y + xc * p["d_skip"].astype(dtype)
+    y = y * jax.nn.silu(z)
+    y = constrain(y, "data", None, "model")
+    out = jnp.dot(y, p["out_proj"].astype(dtype))
+    return constrain(out, "data", None, None)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+    }
+
+
+@_scoped("mamba")
+def mamba_step(p, cfg: ModelConfig, x: jax.Array, state: Dict[str, jax.Array]):
+    """x: (B, 1, D) -> y (B, 1, D), new state."""
+    dtype = compute_dtype(cfg)
+    xz = jnp.dot(x.astype(dtype), p["in_proj"].astype(dtype))
+    xc, z, dt, b_, c_, new_conv = _mamba_inner(p, cfg, xz, conv_state=state["conv"])
+    a = -jnp.exp(p["log_a"].astype(jnp.float32))
+    decay = jnp.exp(dt.astype(jnp.float32)[..., None] * a)[:, 0]          # (B,di,n)
+    drive = ((dt * xc).astype(jnp.float32)[..., None]
+             * b_.astype(jnp.float32)[:, :, None, :])[:, 0]
+    h = state["h"] * decay + drive
+    y = jnp.einsum("bdn,bn->bd", h, c_[:, 0].astype(jnp.float32)).astype(dtype)
+    y = y + xc[:, 0] * p["d_skip"].astype(dtype)
+    y = (y * jax.nn.silu(z[:, 0]))[:, None]
+    out = jnp.dot(y, p["out_proj"].astype(dtype))
+    return out, {"h": h, "conv": new_conv.astype(state["conv"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM): matrix memory with exponential gating
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(init: Initializer, cfg: ModelConfig) -> Dict[str, Any]:
+    d, di = cfg.d_model, cfg.d_inner
+    nh = cfg.num_heads
+    return {
+        "up_proj": init.dense(d, 2 * di),
+        "wq": init.dense(di, di),
+        "wk": init.dense(di, di),
+        "wv": init.dense(di, di),
+        "wi": init.dense(di, nh, scale=0.02),   # input gate (per head)
+        "wf": init.dense(di, nh, scale=0.02),   # forget gate
+        "fb": init.ones(nh) * 3.0,              # forget bias (open at init)
+        "out_norm": init.ones(di),
+        "down_proj": init.dense(di, d),
+    }
+
+
+def _mlstm_qkvif(p, cfg, x):
+    dtype = compute_dtype(cfg)
+    di, nh = cfg.d_inner, cfg.num_heads
+    dh = di // nh
+    b, s, _ = x.shape
+    xz = jnp.dot(x.astype(dtype), p["up_proj"].astype(dtype))
+    xz = constrain(xz, "data", None, "model")
+    xi, z = jnp.split(xz, 2, axis=-1)
+    q = jnp.dot(xi, p["wq"].astype(dtype)).reshape(b, s, nh, dh)
+    k = jnp.dot(xi, p["wk"].astype(dtype)).reshape(b, s, nh, dh) / math.sqrt(dh)
+    v = jnp.dot(xi, p["wv"].astype(dtype)).reshape(b, s, nh, dh)
+    ig = jnp.dot(xi, p["wi"].astype(dtype)).astype(jnp.float32)          # (b,s,nh)
+    fg = (jnp.dot(xi, p["wf"].astype(dtype)).astype(jnp.float32)
+          + p["fb"].astype(jnp.float32))
+    return q, k, v, ig, fg, z
+
+
+@_scoped("mlstm")
+def mlstm_apply(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array,
+                chunk: int = 64) -> jax.Array:
+    """Chunkwise-parallel mLSTM (log-space stabilized).
+
+    Recurrence (per head):  C_t = f_t C_{t-1} + i_t k_t v_t^T
+                            n_t = f_t n_{t-1} + i_t k_t
+                            y_t = (q_t C_t) / max(|q_t n_t|, 1)
+    with f in (0,1) via sigmoid of the forget preactivation and i = exp(ĩ)
+    stabilized by the running max m_t (Beck et al. 2024, Eq. 15-19).
+    """
+    dtype = compute_dtype(cfg)
+    b, s, d = x.shape
+    di, nh = cfg.d_inner, cfg.num_heads
+    dh = di // nh
+    q, k, v, ig, fg, z = _mlstm_qkvif(p, cfg, x)
+
+    l = min(chunk, s)
+    while s % l:
+        l //= 2
+    nc = s // l
+
+    # (b, nc, l, nh, dh) -> (nc, b, nh, l, dh)
+    def chunked(t):
+        return t.reshape(b, nc, l, nh, -1).transpose(1, 0, 3, 2, 4)
+
+    qc, kc, vc = chunked(q), chunked(k), chunked(v)
+    igc = ig.reshape(b, nc, l, nh).transpose(1, 0, 3, 2)        # (nc,b,nh,l)
+    fgc = fg.reshape(b, nc, l, nh).transpose(1, 0, 3, 2)
+
+    logf = jax.nn.log_sigmoid(fgc)                               # (nc,b,nh,l)
+    csum = jnp.cumsum(logf, axis=-1)                             # F_t within chunk
+
+    def step(carry, xs):
+        cmat, nvec, m = carry            # (b,nh,dh,dh), (b,nh,dh), (b,nh)
+        qb, kb, vb, ib, fb_, cs = xs     # per chunk
+        # decay from chunk start to position t: cs (b,nh,l)
+        # local log gates: a[t,tau] = cs_t - cs_tau + i_tau  (tau <= t)
+        gmat = cs[..., :, None] - cs[..., None, :] + ib[..., None, :]
+        tri = jnp.tril(jnp.ones((l, l), bool))
+        gmat = jnp.where(tri, gmat, -jnp.inf)
+        # inter-chunk: contribution decays by cs_t from state with max m
+        inter_log = cs + m[..., None]                            # (b,nh,l)
+        m_new = jnp.maximum(gmat.max(-1), inter_log)             # per t
+        m_new = jnp.maximum(m_new, -1e30)
+        dmat = jnp.exp(gmat - m_new[..., None])                  # (b,nh,l,l)
+        dinter = jnp.exp(inter_log - m_new)                      # (b,nh,l)
+
+        scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb,
+                            preferred_element_type=jnp.float32) * dmat
+        y_intra = jnp.einsum("bhts,bhsd->bhtd", scores.astype(vb.dtype), vb,
+                             preferred_element_type=jnp.float32)
+        y_inter = jnp.einsum("bhtd,bhde->bhte", qb.astype(jnp.float32),
+                             cmat) * dinter[..., None]
+        # normalizer: q·ñ_t = Σ_τ dmat[t,τ]·(q_t·k_τ) + dinter_t·(q_t·ñ_prev)
+        qn = scores.sum(-1) + dinter * jnp.einsum(
+            "bhtd,bhd->bht", qb.astype(jnp.float32), nvec)
+        num = y_intra + y_inter
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m_new))          # max(|qn|, exp(-m))
+        y = num / den[..., None]
+
+        # state update to end of chunk (stabilizer = m at the last position)
+        tot = cs[..., -1]                                        # (b,nh)
+        m_end = m_new[..., -1]
+        wk_ = jnp.exp(tot[..., None] - cs + ib - m_end[..., None])  # (b,nh,l)
+        kf = kb.astype(jnp.float32)
+        c_new = (cmat * jnp.exp(tot + m - m_end)[..., None, None]
+                 + jnp.einsum("bhs,bhsd,bhse->bhde", wk_, kf, vb.astype(jnp.float32)))
+        n_new = (nvec * jnp.exp(tot + m - m_end)[..., None]
+                 + jnp.einsum("bhs,bhsd->bhd", wk_, kf))
+        return (c_new, n_new, m_end), y
+
+    c0 = jnp.zeros((b, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, nh, dh), jnp.float32)
+    m0 = jnp.full((b, nh), -1e30, jnp.float32)
+    _, ys = jax.lax.scan(step, (c0, n0, m0), (qc, kc, vc, igc, fgc, csum))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, di).astype(dtype)
+    y = y * p["out_norm"].astype(dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.dot(y, p["down_proj"].astype(dtype))
+    return constrain(out, "data", None, None)
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    nh = cfg.num_heads
+    dh = cfg.d_inner // nh
+    return {
+        "c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, nh, dh), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+@_scoped("mlstm")
+def mlstm_step(p, cfg: ModelConfig, x: jax.Array, state):
+    """Single-step recurrent mLSTM. x: (B, 1, D)."""
+    dtype = compute_dtype(cfg)
+    b = x.shape[0]
+    di, nh = cfg.d_inner, cfg.num_heads
+    dh = di // nh
+    q, k, v, ig, fg, z = _mlstm_qkvif(p, cfg, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]              # (b, nh, dh)
+    ig, fg = ig[:, 0], fg[:, 0]                      # (b, nh)
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + state["m"], ig)
+    fw = jnp.exp(logf + state["m"] - m_new)
+    iw = jnp.exp(ig - m_new)
+    c = state["c"] * fw[..., None, None] + iw[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = state["n"] * fw[..., None] + iw[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)),
+                      jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, di).astype(dtype)
+    y = y * p["out_norm"].astype(dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.dot(y, p["down_proj"].astype(dtype))
+    return out, {"c": c, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM): scalar memory, sequential
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(init: Initializer, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "wx": init.dense(d, 4 * d),      # i, f, z, o preactivations from x
+        "wh": init.dense(d, 4 * d),      # recurrent
+        "bias": init.zeros(4 * d),
+        "fb": init.ones(d) * 3.0,
+        "out_norm": init.ones(d),
+        "proj": init.dense(d, d),
+    }
+
+
+def _slstm_cell(p, xg, h, c, n, m, d):
+    pre = xg + jnp.dot(h, p["wh"].astype(xg.dtype)) + p["bias"].astype(xg.dtype)
+    i_, f_, z_, o_ = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    f_ = f_ + p["fb"].astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_)
+    m_new = jnp.maximum(logf + m, i_)
+    iw = jnp.exp(i_ - m_new)
+    fw = jnp.exp(logf + m - m_new)
+    c_new = fw * c + iw * jnp.tanh(z_)
+    n_new = fw * n + iw
+    h_new = jax.nn.sigmoid(o_) * c_new / jnp.maximum(n_new, 1.0)
+    return h_new.astype(xg.dtype), c_new, n_new, m_new
+
+
+@_scoped("slstm")
+def slstm_apply(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    dtype = compute_dtype(cfg)
+    b, s, d = x.shape
+    xg = jnp.dot(x.astype(dtype), p["wx"].astype(dtype))  # (b, s, 4d)
+
+    def step(carry, xt):
+        h, c, n, m = carry
+        h2, c2, n2, m2 = _slstm_cell(p, xt, h, c, n, m, d)
+        return (h2, c2, n2, m2), h2
+
+    h0 = jnp.zeros((b, d), dtype)
+    c0 = jnp.zeros((b, d), jnp.float32)
+    n0 = jnp.zeros((b, d), jnp.float32)
+    m0 = jnp.full((b, d), -1e30, jnp.float32)
+    _, hs = jax.lax.scan(step, (h0, c0, n0, m0), xg.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2) * p["out_norm"].astype(dtype)
+    out = jnp.dot(y, p["proj"].astype(dtype))
+    return constrain(out, "data", None, None)
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), dtype),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+@_scoped("slstm")
+def slstm_step(p, cfg: ModelConfig, x: jax.Array, state):
+    dtype = compute_dtype(cfg)
+    xg = jnp.dot(x[:, 0].astype(dtype), p["wx"].astype(dtype))
+    h, c, n, m = _slstm_cell(p, xg, state["h"], state["c"], state["n"], state["m"], cfg.d_model)
+    y = (h * p["out_norm"].astype(dtype))[:, None]
+    out = jnp.dot(y, p["proj"].astype(dtype))
+    return out, {"h": h, "c": c, "n": n, "m": m}

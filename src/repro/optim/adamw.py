@@ -1,0 +1,99 @@
+"""AdamW with fp32 master weights, global-norm clipping, LR schedules.
+
+Self-contained (no optax offline). The optimizer state is a pytree shaped
+like the params, so the distributed layer shards it with the same (or
+ZeRO-extended) PartitionSpecs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "TrainState", "init_state", "apply_updates",
+           "warmup_cosine", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    master_fp32: bool = True     # keep fp32 masters when params are low-prec
+
+
+class TrainState(NamedTuple):
+    step: jax.Array
+    params: Any
+    m: Any
+    v: Any
+    master: Any            # fp32 copies (or None-leaf pytree if disabled)
+
+
+def warmup_cosine(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def init_state(params: Any, cfg: AdamWConfig) -> TrainState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    needs_master = cfg.master_fp32 and any(
+        p.dtype != jnp.float32 for p in jax.tree.leaves(params))
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if needs_master else None)
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                      m=zeros, v=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def apply_updates(state: TrainState, grads: Any, cfg: AdamWConfig) -> TrainState:
+    step = state.step + 1
+    lr = cfg.lr(step) if callable(cfg.lr) else jnp.float32(cfg.lr)
+
+    if cfg.clip_norm is not None:
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(jnp.float32)
+    c2 = 1 - b2 ** step.astype(jnp.float32)
+
+    ref = state.master if state.master is not None else state.params
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / c1
+        vh = v2 / c2
+        new = p.astype(jnp.float32) - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                                            + cfg.weight_decay * p.astype(jnp.float32))
+        return new, m2, v2
+
+    out = jax.tree.map(upd, ref, grads, state.m, state.v)
+    new_ref = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+
+    if state.master is not None:
+        new_params = jax.tree.map(lambda mref, p: mref.astype(p.dtype),
+                                  new_ref, state.params)
+        return TrainState(step, new_params, new_m, new_v, new_ref)
+    return TrainState(step, new_ref, new_m, new_v, None)

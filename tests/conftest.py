@@ -1,0 +1,13 @@
+import os
+
+# Unit tests see a handful of CPU devices (NOT 512 — that is dryrun-only),
+# enough for 4x2 test meshes.
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,180 @@
+"""Distributed runtime tests on 8 host devices: sharded train/decode,
+ZeRO-1/FSDP spec inference, gradient compression, TP-vs-1-device
+equivalence."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import smoke_config
+from repro.distributed.sharding import (
+    batch_specs, cache_specs, data_axes_of, param_specs, state_specs,
+)
+from repro.distributed.steps import (
+    build_decode_step, build_train_step, init_sharded_state, state_shape,
+)
+from repro.launch.mesh import make_mesh_for, make_production_mesh
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.optim.compression import compressed_psum, ef_compress, quantize_int8
+
+
+def _batch(cfg, b, s, rng):
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        batch["patches"] = jnp.asarray(
+            rng.standard_normal((b, cfg.frontend_len, cfg.frontend_dim)), jnp.float32)
+    if cfg.frontend == "audio_stub":
+        batch["frames"] = jnp.asarray(
+            rng.standard_normal((b, s // 4, cfg.frontend_dim)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "qwen3-moe-235b-a22b",
+                                  "hymba-1.5b", "seamless-m4t-large-v2"])
+def test_sharded_train_loss_decreases(arch, rng):
+    cfg = smoke_config(arch)
+    mesh = make_mesh_for(8, model_parallel=2)
+    opt = AdamWConfig(lr=1e-3)
+    state = init_sharded_state(cfg, mesh, opt)
+    jit_for, _, _ = build_train_step(cfg, mesh, opt)
+    batch = _batch(cfg, 8, 32, rng)
+    fn = jit_for(jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch))
+    losses = []
+    for _ in range(3):
+        state, m = fn(state, batch)
+        losses.append(float(m["loss"]))
+        assert np.isfinite(float(m["grad_norm"]))
+    assert losses[-1] < losses[0]
+
+
+def test_tp_matches_single_device(rng):
+    """The TP/SP sharded loss+grad equals the unsharded computation."""
+    cfg = smoke_config("llama3.2-1b")
+    batch = _batch(cfg, 8, 32, rng)
+    params = M.init_params(cfg, seed=0)
+    loss_ref = float(M.loss_fn(params, cfg, batch))
+
+    from repro.distributed.sharding import tree_named
+    from repro.models.layers import mesh_context
+    from repro.distributed.sharding import axis_map_for
+
+    mesh = make_mesh_for(8, model_parallel=4)
+    pshard = tree_named(mesh, param_specs(
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params),
+        mesh))
+    sp = jax.device_put(params, pshard)
+
+    def lossf(p):
+        with mesh_context(mesh, axis_map_for(mesh)):
+            return M.loss_fn(p, cfg, batch)
+
+    loss_tp = float(jax.jit(lossf)(sp))
+    assert abs(loss_tp - loss_ref) < 1e-3
+
+
+def test_micro_batching_matches_full_batch(rng):
+    """Gradient accumulation (micro_steps=4) reproduces the full-batch
+    metrics."""
+    cfg = smoke_config("qwen2-0.5b")
+    mesh = make_mesh_for(8, model_parallel=2)
+    opt = AdamWConfig(lr=1e-3, master_fp32=True)
+    batch = _batch(cfg, 8, 16, rng)
+    bshape = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch)
+
+    losses = {}
+    for micro in (1, 4):
+        state = init_sharded_state(cfg, mesh, opt)
+        jit_for, _, _ = build_train_step(cfg, mesh, opt, micro_steps=micro)
+        fn = jit_for(bshape)
+        state, m = fn(state, batch)
+        state, m2 = fn(state, batch)
+        losses[micro] = (float(m["loss"]), float(m2["loss"]))
+    assert abs(losses[1][0] - losses[4][0]) < 2e-3
+    assert abs(losses[1][1] - losses[4][1]) < 5e-3
+
+
+def test_production_mesh_shapes():
+    # 8 test devices cannot host the 256/512-chip production meshes — both
+    # must fail cleanly here; actual construction is exercised by the
+    # 80-cell dry-run under xla_force_host_platform_device_count=512.
+    with pytest.raises(Exception):
+        make_production_mesh()
+    with pytest.raises(Exception):
+        make_production_mesh(multi_pod=True)
+
+
+def test_spec_inference_rules():
+    cfg = smoke_config("qwen3-moe-235b-a22b")
+    mesh = make_mesh_for(8, model_parallel=2)
+    pshape = jax.eval_shape(lambda: M.init_params(cfg, 0))
+    specs = param_specs(pshape, mesh, fsdp_threshold=None)
+    # MoE experts sharded on E over model
+    assert specs["layers"]["mlp"]["wi"] == P(None, "model", None, None)
+    assert specs["layers"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["layers"]["attn"]["wo"] == P(None, "model", None)
+    assert specs["embed"] == P("model", None)
+
+    # FSDP extends large tensors over data
+    big = {"layers": {"mlp": {"wi": jax.ShapeDtypeStruct((4, 8, 64, 1024), jnp.float32)}}}
+    sp2 = param_specs(big, mesh, fsdp_threshold=1024)
+    assert sp2["layers"]["mlp"]["wi"] == P(None, "model", None, "data")
+
+
+def test_zero1_extends_optimizer_specs():
+    cfg = smoke_config("llama3.2-1b")
+    mesh = make_mesh_for(8, model_parallel=2)
+    opt = AdamWConfig()
+    sshape = state_shape(cfg, opt)
+    specs = state_specs(sshape, mesh, zero1=True)
+    wq_m = specs.m["layers"]["attn"]["wq"]
+    assert "data" in jax.tree.leaves(
+        wq_m, is_leaf=lambda x: isinstance(x, str)) or any(
+        e is not None and "data" in str(e) for e in wq_m)
+
+
+def test_decode_cache_specs_shard_kv_seq():
+    cfg = smoke_config("qwen2-72b")
+    mesh = make_mesh_for(8, model_parallel=2)
+    cache = M.init_cache(cfg, batch=8, smax=64)
+    cshape = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), cache)
+    specs = cache_specs(cshape, mesh)
+    assert specs["k"][2] == "model"      # KV length over model
+    assert specs["k"][1] == "data"       # batch over data
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bounded(self, rng):
+        x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+        q, s = quantize_int8(x)
+        err = jnp.abs(q.astype(jnp.float32) * s - x).max()
+        assert float(err) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_converges(self, rng):
+        """EF compression: accumulated updates converge to the true sum —
+        the residual carries what quantization dropped."""
+        g_true = jnp.asarray(rng.standard_normal((64,)) * 0.01, jnp.float32)
+        resid = {"g": jnp.zeros_like(g_true)}
+        total = jnp.zeros_like(g_true)
+        for _ in range(50):
+            dq, resid = ef_compress({"g": g_true}, resid)
+            total = total + dq["g"]
+        np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g_true),
+                                   rtol=0.05, atol=1e-4)
+
+    def test_compressed_psum_shard_map(self, rng):
+        from jax.experimental.shard_map import shard_map
+
+        mesh = make_mesh_for(8, model_parallel=1)
+        x = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+
+        fn = shard_map(lambda v: compressed_psum(v, "data"), mesh=mesh,
+                       in_specs=P("data", None), out_specs=P(None, None),
+                       check_rep=False)
+        out = fn(x)
+        ref = x.reshape(8, 1, 16).sum(0).repeat(1, axis=0)
+        np.testing.assert_allclose(np.asarray(out)[0], np.asarray(x.sum(0)),
+                                   rtol=0.05, atol=0.05)

@@ -1,0 +1,129 @@
+"""Scheduler (paper Sec. 3.3) unit + property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import (
+    BUBBLE, inorder_cycles, schedule_nonzeros, schedule_stats, verify_schedule,
+)
+
+
+def test_paper_fig5_example():
+    """The worked example of Fig. 5, reconstructed from the prose: 10
+    non-zeros, D=4; the paper's OoO schedule lands every element exactly
+    where the text states (cycles 0,1,2,3,4,5,6,8,9,10; bubble at 7),
+    11 cycles total vs 15 column-major in-order."""
+    # column-major stream: col0 {(0,0),(2,0)}, col1 {(1,1),(2,1),(4,1)},
+    # col2 {(0,2),(2,2),(3,2)}, col3 {(0,3),(3,3)}
+    rows = np.array([0, 2, 1, 2, 4, 0, 2, 3, 0, 3])
+    s = schedule_nonzeros(rows, d=4)
+    verify_schedule(s, rows)
+    assert s.nnz == 10
+    assert s.cycles == 11                         # paper: cycles 0..10
+    # per-element placements from the paper's walkthrough
+    slot_of = {int(i): c for c, i in enumerate(s.slots) if i != BUBBLE}
+    assert slot_of[0] == 0          # blue (0,0) @ 0
+    assert slot_of[1] == 1          # yellow (2,0) @ 1
+    assert slot_of[3] == 5          # yellow (2,1) pushed to 5
+    assert slot_of[5] == 4          # blue (0,2) fills bubble 4
+    assert slot_of[6] == 9          # yellow (2,2) @ 5+4
+    assert slot_of[7] == 6          # green (3,2) @ 6
+    assert slot_of[8] == 8          # blue (0,3) @ 8
+    assert slot_of[9] == 10         # green (3,3) @ 10
+    assert inorder_cycles(rows, 4) == 15          # paper: column-major in-order
+
+
+def test_no_conflict_is_dense():
+    rows = np.arange(100)
+    s = schedule_nonzeros(rows, d=10)
+    assert s.cycles == 100 and s.bubbles == 0
+
+
+def test_single_row_worst_case():
+    rows = np.zeros(10, np.int64)
+    s = schedule_nonzeros(rows, d=7)
+    verify_schedule(s, rows)
+    assert s.cycles == 9 * 7 + 1
+
+
+def test_d1_never_bubbles():
+    rows = np.array([5, 5, 5, 1, 5, 2])
+    s = schedule_nonzeros(rows, d=1)
+    assert s.cycles == len(rows) and s.bubbles == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    rows=st.lists(st.integers(0, 30), min_size=0, max_size=300),
+    d=st.integers(1, 12),
+)
+def test_property_legal_and_complete(rows, d):
+    """Every schedule is a permutation of the input with same-row spacing
+    >= D (II=1 legality) — the core invariant of the paper's Sec. 3.3."""
+    rows = np.asarray(rows, np.int64)
+    s = schedule_nonzeros(rows, d)
+    verify_schedule(s, rows)
+    # never slower than worst-case in-order, never faster than nnz
+    assert s.cycles <= max(inorder_cycles(rows, d), 0) or len(rows) == 0
+    assert s.cycles >= len(rows)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    rows=st.lists(st.integers(0, 8), min_size=1, max_size=200),
+    d=st.integers(2, 10),
+    window=st.integers(1, 64),
+)
+def test_property_windowed_still_legal(rows, d, window):
+    rows = np.asarray(rows, np.int64)
+    s = schedule_nonzeros(rows, d, window=window)
+    verify_schedule(s, rows)
+
+
+def test_stats_speedup_direction():
+    rng = np.random.default_rng(0)
+    # CSR row-order streaming (in-order baseline) stalls on every
+    # consecutive same-row pair; OoO interleaves rows and fills the gaps
+    rows = np.sort(rng.integers(0, 64, size=512))
+    st_ = schedule_stats(rows, d=10)
+    assert st_["speedup_vs_inorder"] > 5.0
+    assert st_["cycles_ooo"] >= st_["nnz"]
+
+
+class TestHubSplit:
+    """Beyond-paper virtual-sub-row splitting (schedule.split_hub_rows)."""
+
+    def test_preserves_multiset_partition(self):
+        from repro.core.schedule import split_hub_rows
+        rng = np.random.default_rng(0)
+        rows = rng.integers(0, 10, 500)
+        out = split_hub_rows(rows, 7)
+        # every virtual row maps back to its original (mod stride)
+        stride = int(rows.max()) + 1
+        assert np.array_equal(out % stride, rows)
+        # no virtual row exceeds the threshold
+        _, counts = np.unique(out, return_counts=True)
+        assert counts.max() <= 7
+
+    def test_breaks_hub_serialization(self):
+        from repro.core.schedule import split_hub_rows
+        rows = np.zeros(200, np.int64)           # one hub row
+        rows[::4] = np.arange(50) + 1            # some filler
+        s0 = schedule_nonzeros(np.sort(rows), d=10)
+        rs = split_hub_rows(np.sort(rows), 16)
+        s1 = schedule_nonzeros(rs, d=10)
+        verify_schedule(s1, rs)
+        assert s1.cycles < 0.5 * s0.cycles
+
+    @settings(max_examples=60, deadline=None)
+    @given(rows=st.lists(st.integers(0, 6), min_size=1, max_size=300),
+           thr=st.integers(1, 20), d=st.integers(2, 12))
+    def test_property_never_slower(self, rows, thr, d):
+        from repro.core.schedule import split_hub_rows
+        rows = np.asarray(rows, np.int64)
+        s0 = schedule_nonzeros(rows, d)
+        rs = split_hub_rows(rows, thr)
+        s1 = schedule_nonzeros(rs, d)
+        verify_schedule(s1, rs)
+        assert s1.cycles <= s0.cycles

@@ -1,0 +1,98 @@
+"""End-to-end behaviour tests for the paper's system: the full SpMM serving
+path (preprocess -> HFlex pack -> kernel -> epilogue) on realistic matrix
+families, plus the paper's headline properties."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.engine import SextansEngine
+from repro.core.partition import SextansParams
+from repro.core.perfmodel import PLATFORMS, event_cycles, gpu_model_time, platform_time
+from repro.core.sparse import (
+    banded_sparse, mesh_2d_sparse, power_law_sparse, random_sparse, spmm_reference,
+)
+from repro.launch.serve import SpmmRequest, serve_spmm_requests
+
+
+def test_spmm_serving_end_to_end(rng):
+    """Paper's deployment story: many different SpMM problems served by one
+    engine, correct results, executable cache amortized across requests."""
+    eng = SextansEngine(tm=64, k0=128, chunk=8, impl="jnp", bucket=True)
+    reqs = []
+    for i, (gen, args) in enumerate([
+        (power_law_sparse, (300, 300, 4)),
+        (banded_sparse, (256, 256, 4)),
+        (random_sparse, (200, 380, 0.02)),
+        (mesh_2d_sparse, (18,)),
+        (power_law_sparse, (310, 310, 4)),   # same bucket as request 0
+    ]):
+        a = gen(*args, seed=i)
+        m, k = a.shape
+        reqs.append(SpmmRequest(
+            a=a,
+            b=rng.standard_normal((k, 16)).astype(np.float32),
+            c=rng.standard_normal((m, 16)).astype(np.float32),
+            alpha=1.0, beta=1.0))
+    outs, stats = serve_spmm_requests(reqs, eng)
+    for r, o in zip(reqs, outs):
+        ref = spmm_reference(r.a, r.b, r.c, r.alpha, r.beta)
+        np.testing.assert_allclose(o, ref, rtol=2e-4,
+                                   atol=2e-4 * np.abs(ref).max())
+    assert stats["requests"] == 5
+    assert stats["executable_cache_hit_rate"] > 0  # HFlex reuse happened
+
+
+def test_geomean_speedup_over_k80_model():
+    """Directional reproduction of the paper's headline: Sextans geomean
+    speedup over (modeled) K80 on a mixed suite at paper-like N values."""
+    pp = SextansParams()
+    suite = [
+        power_law_sparse(1500, 1500, 5, seed=1),
+        banded_sparse(2000, 2000, 8, seed=2),
+        random_sparse(1000, 1200, 0.01, seed=3),
+        mesh_2d_sparse(40, seed=4),
+        power_law_sparse(800, 800, 10, seed=5),
+    ]
+    ratios = []
+    for a in suite:
+        for n in (8, 64, 512):
+            t_s = platform_time(a, n, PLATFORMS["SEXTANS"],
+                                cycles=event_cycles(a, n, pp))
+            t_g = gpu_model_time(a, n, PLATFORMS["K80"])
+            ratios.append(t_g / t_s)
+    geo = float(np.exp(np.mean(np.log(ratios))))
+    # paper: 2.50x geomean (measured GPUs); our modeled K80 should land in
+    # the same regime
+    assert 1.5 < geo < 6.0, geo
+
+
+def test_schedule_quality_on_suite():
+    """II=1 streams with low bubble overhead on regular matrices; power-law
+    hubs legitimately force bubbles (one row's non-zeros must stay D apart
+    within a window — the paper's imbalance discussion, Sec. 2.2)."""
+    from repro.core.hflex import pack_pe_streams
+
+    # banded + mod-P interleave yields same-row runs inside a window (a
+    # band row owns ~bw consecutive columns), so some bubbles are inherent
+    for gen, args, bound in [(banded_sparse, (1000, 1000, 6), 0.35),
+                             (mesh_2d_sparse, (30,), 0.35),
+                             (power_law_sparse, (1000, 1000, 6), 0.90)]:
+        a = gen(*args, seed=0)
+        ps = pack_pe_streams(a, SextansParams(K0=256, P=16, D=10))
+        assert ps.bubble_fraction < bound, (gen.__name__, ps.bubble_fraction)
+
+
+def test_quickstart_example_runs():
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    root = pathlib.Path(__file__).resolve().parents[1]
+    r = subprocess.run(
+        [sys.executable, str(root / "examples" / "quickstart.py")],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": str(root / "src")})
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "OK" in r.stdout
