@@ -144,22 +144,22 @@ def bench_hub_split(budget: str) -> None:
 def bench_kernels() -> None:
     import jax.numpy as jnp
 
+    import repro.sparse_api as sp
     from repro.core.sparse import power_law_sparse
-    from repro.kernels.ops import pack_for_device, sextans_spmm
 
     rng = np.random.default_rng(0)
     a = power_law_sparse(512, 512, 6, seed=1)
     b = jnp.asarray(rng.standard_normal((512, 64)), jnp.float32)
-    for impl in ("pallas", "pallas_onehot", "jnp"):
-        packed = pack_for_device(a, tm=128, k0=128, chunk=8)
-        sextans_spmm(packed, b, impl=impl).block_until_ready()  # warm
-        t0 = time.time()
+    A = sp.from_sparse_matrix(a, tm=128, k0=128, chunk=8, bucket=False)
+    for backend in ("pallas", "pallas_onehot", "jnp"):
+        sp.spmm(A, b, backend=backend).block_until_ready()  # warm
+        t0 = time.perf_counter()
         iters = 5
         for _ in range(iters):
-            sextans_spmm(packed, b, impl=impl).block_until_ready()
-        us = (time.time() - t0) * 1e6 / iters
+            sp.spmm(A, b, backend=backend).block_until_ready()
+        us = (time.perf_counter() - t0) * 1e6 / iters
         gf = a.problem_size_flop(64) / (us / 1e6) / 1e9
-        _row(f"kernel_spmm_{impl}", us, f"{gf:.3f}GFLOPs_cpu_interpret")
+        _row(f"kernel_spmm_{backend}", us, f"{gf:.3f}GFLOPs_cpu_interpret")
 
 
 def bench_scheduler() -> None:

@@ -3,8 +3,9 @@
 
 A reduced llama-family model's FFN weights are magnitude-pruned to
 block-sparse form (BSR, 128x128 tiles on the real config; reduced here)
-and served through the bsr_matmul Pallas kernel; outputs are compared
-against the dense model with the same masked weights.
+and served through the unified sparse front-end (``SparseTensor`` with
+``Format.BSR`` + ``spmm``); outputs are compared against the dense model
+with the same masked weights.
 
 Run:  PYTHONPATH=src python examples/sparse_ffn_inference.py
 """
@@ -13,8 +14,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import repro.sparse_api as sp
 from repro.configs import smoke_config
-from repro.kernels.ops import bsr_matmul, bsr_pack
 from repro.models import model as M
 
 
@@ -40,7 +41,10 @@ def main():
             thresh = np.quantile(energy, 0.5)
             keep = energy > thresh
             masked[li] = (blocks * keep[:, None, :, None]).reshape(k, f)
-            packed_layers.append(bsr_pack(masked[li], tile, tile))
+            # SparseTensor orientation: A = W^T of shape (f, k), y = (A@x^T)^T
+            packed_layers.append(
+                sp.from_dense(masked[li].T, format=sp.Format.BSR,
+                              block=(tile, tile)))
         bsr_weights.append(packed_layers)
         dense_masked["layers"]["mlp"][wname] = jnp.asarray(masked)
 
@@ -50,10 +54,10 @@ def main():
                                    jnp.int32)}
     ref_logits = M.forward(dense_masked, cfg, batch, remat=False)
 
-    # spot-check the BSR kernel against the masked dense FFN, layer 0
+    # spot-check the BSR path against the masked dense FFN, layer 0
     x = jnp.asarray(rng.standard_normal((8, cfg.d_model)), jnp.float32)
-    wi_bsr = bsr_weights[0][0]
-    y_bsr = bsr_matmul(x, wi_bsr, impl="pallas")
+    wi_bsr = bsr_weights[0][0]                       # SparseTensor (f, k)
+    y_bsr = sp.spmm(wi_bsr, x.T, backend="pallas", tn=16).T
     y_ref = x @ dense_masked["layers"]["mlp"]["wi"][0]
     err = float(jnp.abs(y_bsr - y_ref).max())
     density = wi_bsr.density

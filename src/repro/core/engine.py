@@ -11,7 +11,14 @@ The engine restores the HFlex property by
    counts avoided place/route runs;
 3. driving all data-dependent work (per-slab non-zero counts) through the
    scalar-prefetched pointer matrix ``q`` — contents change per problem,
-   the compiled program does not.
+   the compiled program does not;
+4. treating ``alpha``/``beta`` as *traced* scalars (the kernel reads them
+   from SMEM): an epilogue sweep is **zero** additional executables — they
+   are no longer part of :meth:`signature`.
+
+The engine is a thin stats-and-sharding wrapper over the unified front-end
+:mod:`repro.sparse_api` (SparseTensor + backend registry); ``impl`` is a
+registered backend name ("pallas" | "pallas_onehot" | "jnp" | "auto").
 
 Also provides the multi-chip execution plan: A row-blocks sharded across
 the ``data`` axis (the paper's `row mod P` lifted to chips — C shards are
@@ -29,12 +36,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.hflex import bucket_geometry
-from repro.core.partition import SextansParams, cdiv
+from repro.core.partition import cdiv
 from repro.core.sparse import SparseMatrix
 
-# NOTE: repro.kernels.ops is imported lazily inside methods — importing it
-# here would cycle (kernels.ops -> core.hflex -> core.__init__ -> engine).
+# NOTE: repro.sparse_api is imported lazily inside methods — importing it
+# here would cycle (sparse_api -> core.hflex -> core.__init__ -> engine).
 
 __all__ = ["SextansEngine", "EngineStats"]
 
@@ -78,26 +84,44 @@ class SextansEngine:
 
     # -- preprocessing ------------------------------------------------------
 
-    def pack(self, a: SparseMatrix) -> "PackedSpMM":
-        from repro.kernels.ops import pack_for_device
+    def pack(self, a: SparseMatrix) -> "SparseTensor":
+        from repro.sparse_api import Format, from_sparse_matrix
 
-        packed = pack_for_device(
-            a, tm=self.tm, k0=self.k0, chunk=self.chunk,
+        t = from_sparse_matrix(
+            a, format=Format.HFLEX, tm=self.tm, k0=self.k0, chunk=self.chunk,
             interleave=self.interleave, bucket=self.bucket,
         )
         self.stats.packs += 1
-        self.stats.real_nnz += packed.nnz
-        self.stats.padded_slots += int(np.prod(packed.vals.shape)) - packed.nnz
-        return packed
+        self.stats.real_nnz += t.nnz
+        self.stats.padded_slots += int(np.prod(t.data.vals.shape)) - t.nnz
+        return t
+
+    def _as_tensor(self, packed) -> "SparseTensor":
+        from repro.sparse_api import Format, SparseTensor
+        from repro.sparse_api.tensor import PackedSpMM
+
+        if isinstance(packed, SparseTensor):
+            return packed
+        if isinstance(packed, PackedSpMM):   # legacy callers
+            return SparseTensor(data=packed, format=Format.HFLEX,
+                                shape=(packed.m, packed.k))
+        raise TypeError(f"expected SparseTensor/PackedSpMM, got {type(packed)}")
 
     # -- execution ----------------------------------------------------------
 
-    def signature(self, packed, n: int, alpha: float, beta: float) -> Tuple:
-        """Executable identity: geometry + epilogue constants (everything
-        that forces a recompile). Matrix *contents* are excluded — HFlex."""
+    def signature(self, packed, n: int, b=None) -> Tuple:
+        """Executable identity: geometry + padded N + backend (everything
+        that forces a recompile). Matrix *contents* are excluded — HFlex —
+        and so are alpha/beta, which the kernel reads at run time.
+
+        ``b`` is forwarded to backend resolution so custom ``auto`` policies
+        that inspect the operand see the same value dispatch will."""
+        from repro.sparse_api import resolve_backend
+
+        t = self._as_tensor(packed)
         npad = cdiv(n, self.tn) * self.tn
-        return (*packed.geometry, packed.tm, packed.k0, packed.chunk,
-                packed.interleaved, npad, float(alpha), float(beta), self.impl)
+        backend = resolve_backend(self.impl, t, b)
+        return (*t.geometry, npad, backend)
 
     def spmm(
         self,
@@ -107,19 +131,18 @@ class SextansEngine:
         alpha: float = 1.0,
         beta: float = 0.0,
     ) -> jax.Array:
-        from repro.kernels.ops import sextans_spmm
+        from repro.sparse_api import spmm
 
-        sig = self.signature(packed, b.shape[1], alpha, beta)
+        t = self._as_tensor(packed)
+        sig = self.signature(t, b.shape[1], b)
         if sig in self._seen_signatures:
             self.stats.cache_hits += 1
         else:
             self.stats.cache_misses += 1
             self._seen_signatures.add(sig)
         self.stats.calls += 1
-        return sextans_spmm(
-            packed, b, c, alpha=alpha, beta=beta,
-            impl=self.impl, tn=self.tn, interpret=self.interpret,
-        )
+        return spmm(t, b, c, alpha, beta, backend=self.impl,
+                    tn=self.tn, interpret=self.interpret)
 
     def __call__(self, a: SparseMatrix, b, c=None, alpha: float = 1.0, beta: float = 0.0):
         return self.spmm(self.pack(a), jnp.asarray(b),
@@ -143,6 +166,7 @@ class SextansEngine:
             "cols": P(data_axis, None, None),
             "rows": P(data_axis, None, None),
             "q": P(data_axis, None),
+            "nse": P(data_axis, None),
             "b": P(None, model_axis),
             "c": P(data_axis, model_axis),
         }
@@ -150,24 +174,29 @@ class SextansEngine:
     def sharded_spmm_fn(self, mesh: Mesh, packed, n: int,
                         alpha: float = 1.0, beta: float = 0.0):
         """Build a jit'd sharded SpMM for lowering/execution on a mesh."""
-        from repro.kernels.ops import PackedSpMM, sextans_spmm
+        from repro.sparse_api import SparseTensor, resolve_backend, spmm_raw
+        from repro.sparse_api.tensor import Format, PackedSpMM
 
+        t = self._as_tensor(packed)
         specs = self.shard_specs()
-        impl = self.impl
+        backend = resolve_backend(self.impl, t)
         tn = self.tn
         interp = self.interpret
 
-        def fn(pk: PackedSpMM, b, c):
-            return sextans_spmm(pk, b, c, alpha=alpha, beta=beta,
-                                impl=impl, tn=tn, interpret=interp)
+        def fn(a: SparseTensor, b, c):
+            return spmm_raw(backend, a, b, c, alpha, beta,
+                            tn=tn, interpret=interp)
 
+        d = t.data
         pk_shard = PackedSpMM(
-            vals=specs["vals"], cols=specs["cols"], rows=specs["rows"], q=specs["q"],
-            m=packed.m, k=packed.k, tm=packed.tm, k0=packed.k0,
-            chunk=packed.chunk, interleaved=packed.interleaved, nnz=packed.nnz,
+            vals=specs["vals"], cols=specs["cols"], rows=specs["rows"],
+            q=specs["q"], nse=specs["nse"],
+            m=d.m, k=d.k, tm=d.tm, k0=d.k0,
+            chunk=d.chunk, interleaved=d.interleaved, nnz=d.nnz,
         )
+        t_shard = SparseTensor(data=pk_shard, format=Format.HFLEX, shape=t.shape)
         in_shardings = (
-            jax.tree.map(lambda s: NamedSharding(mesh, s), pk_shard,
+            jax.tree.map(lambda s: NamedSharding(mesh, s), t_shard,
                          is_leaf=lambda x: isinstance(x, P)),
             NamedSharding(mesh, specs["b"]),
             NamedSharding(mesh, specs["c"]),

@@ -185,6 +185,9 @@ class BlockSlabs:
     cols : (MB, NW, LW) int32     — local col in [0, K0), 0 in padding
     rows : (MB, NW, LW) int32     — local row in [0, TM), 0 in padding
     q    : (MB, NW)     int32     — real nnz count per slab (chunk-ceiled)
+    nse  : (MB, NW)     int32     — *true* nnz per slab (un-ceiled); slots
+                                    at position >= nse are structural padding
+                                    (autodiff masks their cotangents)
     """
 
     m: int
@@ -197,6 +200,7 @@ class BlockSlabs:
     rows: np.ndarray
     q: np.ndarray
     nnz: int
+    nse: Optional[np.ndarray] = None
 
     @property
     def mb(self) -> int:
@@ -288,6 +292,7 @@ def pack_block_slabs(
     bs = BlockSlabs(
         m=m, k=k, tm=tm, k0=k0, chunk=chunk,
         vals=vals, cols=cols, rows=rows, q=q, nnz=a.nnz,
+        nse=counts.astype(np.int32),
     )
     bs.interleaved = bool(interleave and mb > 1)  # type: ignore[attr-defined]
     return bs

@@ -116,9 +116,10 @@ def random_sparse(
     flat = rng.choice(m * k, size=nnz, replace=False)
     row = (flat // k).astype(np.int32)
     col = (flat % k).astype(np.int32)
-    val = rng.standard_normal(nnz).astype(dtype)
-    # Avoid exact zeros so nnz is stable under round-trips.
-    val = np.where(np.abs(val) < 1e-6, np.float32(1e-3), val).astype(np.float32)
+    val = rng.standard_normal(nnz)
+    # Avoid exact zeros so nnz is stable under round-trips; keep the
+    # requested dtype (it used to be silently discarded here).
+    val = np.where(np.abs(val) < 1e-6, 1e-3, val).astype(dtype)
     return SparseMatrix((m, k), row, col, val).sorted_column_major()
 
 

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 __all__ = ["bsr_matmul_pallas"]
 
 
@@ -92,7 +94,7 @@ def bsr_matmul_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, nf * tf), x.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
     )(indptr, brow, x, blocks)

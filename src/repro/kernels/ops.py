@@ -1,71 +1,44 @@
-"""User-facing jit'd SpMM ops: packing, padding, permutation, dispatch.
+"""Legacy SpMM entry points — thin deprecation shims over repro.sparse_api.
 
-``pack_for_device`` turns a host :class:`SparseMatrix` into a
-:class:`PackedSpMM` pytree; ``sextans_spmm`` executes
-``C = α·A×B + β·C`` with implementation dispatch:
+The historical API (``pack_for_device`` -> ``PackedSpMM`` ->
+``sextans_spmm(..., impl=...)`` and the disconnected ``BsrWeight`` /
+``bsr_matmul`` twin) is kept working for existing callers, but everything
+now routes through the unified front-end:
 
-* ``pallas``        — sextans_spmm kernel, vector row-gather (default)
-* ``pallas_onehot`` — sextans_spmm kernel, pure-MXU one-hot gather
-* ``jnp``           — segment-sum slab oracle (XLA path, also the CPU
-                      production path)
+    repro.sparse_api.SparseTensor  +  repro.sparse_api.spmm
 
-The block-row interleave permutation (Eq. 4 lifted to TM blocks) is applied
-to C_in / undone on C_out as pure reshape+transpose (no gather).
+which adds format-agnostic dispatch (backend registry), differentiability,
+and traced alpha/beta.  New code should use ``repro.sparse_api`` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional, Tuple
+import warnings
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hflex import BlockSlabs, bucket_geometry, pack_block_slabs
-from repro.core.partition import cdiv
 from repro.core.sparse import SparseMatrix
+from repro.sparse_api.tensor import (
+    BsrWeight,
+    Format,
+    PackedSpMM,
+    SparseTensor,
+    from_bsr_weight,
+    pack_bsr_weight,
+    pack_hflex,
+)
 
-from . import ref as ref_ops
-from .bsr_spmm import bsr_matmul_pallas
-from .sextans_spmm import sextans_spmm_pallas
-
-__all__ = ["PackedSpMM", "pack_for_device", "sextans_spmm", "BsrWeight", "bsr_pack", "bsr_matmul"]
+__all__ = ["PackedSpMM", "pack_for_device", "sextans_spmm", "BsrWeight",
+           "bsr_pack", "bsr_matmul"]
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class PackedSpMM:
-    """Device-resident HFlex-packed sparse matrix."""
-
-    vals: jax.Array  # (MB, NW, LW) f32
-    cols: jax.Array  # (MB, NW, LW) i32
-    rows: jax.Array  # (MB, NW, LW) i32
-    q: jax.Array     # (MB, NW) i32
-    m: int = dataclasses.field(metadata=dict(static=True))
-    k: int = dataclasses.field(metadata=dict(static=True))
-    tm: int = dataclasses.field(metadata=dict(static=True))
-    k0: int = dataclasses.field(metadata=dict(static=True))
-    chunk: int = dataclasses.field(metadata=dict(static=True))
-    interleaved: bool = dataclasses.field(metadata=dict(static=True))
-    nnz: int = dataclasses.field(metadata=dict(static=True))
-
-    @property
-    def mb(self) -> int:
-        return self.vals.shape[0]
-
-    @property
-    def nw(self) -> int:
-        return self.vals.shape[1]
-
-    @property
-    def lw(self) -> int:
-        return self.vals.shape[2]
-
-    @property
-    def geometry(self) -> Tuple[int, int, int]:
-        return (self.mb, self.nw, self.lw)
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.kernels.ops.{old} is deprecated; use {new} instead",
+        DeprecationWarning, stacklevel=3)
 
 
 def pack_for_device(
@@ -76,47 +49,12 @@ def pack_for_device(
     interleave: bool = True,
     bucket: bool = False,
 ) -> PackedSpMM:
-    """Host preprocessing -> device arrays. ``bucket=True`` rounds LW up to a
-    power of two so matrices of similar density share one compiled kernel
-    (HFlex compile-cache)."""
-    slabs = pack_block_slabs(a, tm=tm, k0=k0, chunk=chunk, interleave=interleave)
-    lw = slabs.lw
-    if bucket:
-        _, _, lw_b, _ = bucket_geometry(slabs.mb, slabs.nw, slabs.lw, 1)
-        if lw_b > lw:
-            pad = lw_b - lw
-            slabs = BlockSlabs(
-                m=slabs.m, k=slabs.k, tm=tm, k0=k0, chunk=chunk,
-                vals=np.pad(slabs.vals, ((0, 0), (0, 0), (0, pad))),
-                cols=np.pad(slabs.cols, ((0, 0), (0, 0), (0, pad))),
-                rows=np.pad(slabs.rows, ((0, 0), (0, 0), (0, pad))),
-                q=slabs.q, nnz=slabs.nnz,
-            )
-    return PackedSpMM(
-        vals=jnp.asarray(slabs.vals),
-        cols=jnp.asarray(slabs.cols),
-        rows=jnp.asarray(slabs.rows),
-        q=jnp.asarray(slabs.q),
-        m=slabs.m, k=slabs.k, tm=tm, k0=k0, chunk=chunk,
-        interleaved=bool(getattr(slabs, "interleaved", interleave and slabs.mb > 1)),
-        nnz=slabs.nnz,
-    )
+    """Deprecated: use repro.sparse_api.from_sparse_matrix / pack_hflex."""
+    _deprecated("pack_for_device", "repro.sparse_api.from_sparse_matrix")
+    return pack_hflex(a, tm=tm, k0=k0, chunk=chunk, interleave=interleave,
+                      bucket=bucket)
 
 
-def _permute_rows_fwd(x: jax.Array, mb: int, tm: int) -> jax.Array:
-    """true-row layout -> interleaved block layout (r -> (r%mb)*tm + r//mb)."""
-    n = x.shape[1]
-    return x.reshape(tm, mb, n).transpose(1, 0, 2).reshape(mb * tm, n)
-
-
-def _permute_rows_inv(x: jax.Array, mb: int, tm: int) -> jax.Array:
-    n = x.shape[1]
-    return x.reshape(mb, tm, n).transpose(1, 0, 2).reshape(mb * tm, n)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("alpha", "beta", "impl", "tn", "interpret")
-)
 def sextans_spmm(
     packed: PackedSpMM,
     b: jax.Array,
@@ -128,96 +66,25 @@ def sextans_spmm(
     tn: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
-    """C_out = alpha * A @ B + beta * C  for a packed sparse A."""
-    m, k, tm, k0 = packed.m, packed.k, packed.tm, packed.k0
-    mb, nw = packed.mb, packed.nw
-    n = b.shape[1]
-    if b.shape[0] != k:
-        raise ValueError(f"B rows {b.shape[0]} != A cols {k}")
-    if c is None:
-        c = jnp.zeros((m, n), b.dtype)
+    """Deprecated: use repro.sparse_api.spmm.  ``impl`` maps to a registered
+    backend name; alpha/beta are now traced (no recompile per value)."""
+    from repro.sparse_api import spmm
 
-    if impl == "jnp":
-        # Production XLA path: slab-format segment-sum (no padding of N).
-        cin = c
-        if packed.interleaved:
-            mpad = mb * tm
-            cin = jnp.pad(c, ((0, mpad - m), (0, 0)))
-            cin = _permute_rows_fwd(cin, mb, tm)
-        else:
-            cin = jnp.pad(c, ((0, mb * tm - m), (0, 0)))
-        bp = jnp.pad(b, ((0, nw * k0 - k), (0, 0)))
-        out = ref_ops.spmm_slabs_ref(
-            packed.vals, packed.cols, packed.rows, packed.q, bp, cin,
-            k0, tm, alpha, beta,
-        )
-        if packed.interleaved:
-            out = _permute_rows_inv(out, mb, tm)
-        return out[:m]
-
-    npad = cdiv(n, tn) * tn
-    bp = jnp.pad(b, ((0, nw * k0 - k), (0, npad - n)))
-    cp = jnp.pad(c, ((0, mb * tm - m), (0, npad - n)))
-    if packed.interleaved:
-        cp = _permute_rows_fwd(cp, mb, tm)
-    gather = "onehot" if impl == "pallas_onehot" else "gather"
-    out = sextans_spmm_pallas(
-        packed.vals, packed.cols, packed.rows, packed.q, bp, cp,
-        tm=tm, k0=k0, chunk=packed.chunk, tn=tn,
-        alpha=alpha, beta=beta, gather=gather, interpret=interpret,
-    )
-    if packed.interleaved:
-        out = _permute_rows_inv(out, mb, tm)
-    return out[:m, :n]
+    _deprecated("sextans_spmm", "repro.sparse_api.spmm")
+    a = SparseTensor(data=packed, format=Format.HFLEX,
+                     shape=(packed.m, packed.k))
+    opts = {"tn": tn, "interpret": interpret} if impl != "jnp" else {}
+    return spmm(a, b, c, alpha, beta, backend=impl, **opts)
 
 
-# ---------------------------------------------------------------------------
-# Block-sparse weights (beyond-paper, used by SparseLinear model layers)
-# ---------------------------------------------------------------------------
+def bsr_pack(w: np.ndarray, tk: int = 128, tf: int = 128,
+             threshold: float = 0.0) -> BsrWeight:
+    """Deprecated: use repro.sparse_api.pack_bsr_weight (or from_dense with
+    Format.BSR)."""
+    _deprecated("bsr_pack", "repro.sparse_api.pack_bsr_weight")
+    return pack_bsr_weight(w, tk=tk, tf=tf, threshold=threshold)
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class BsrWeight:
-    blocks: jax.Array   # (NB, TK, TF)
-    brow: jax.Array     # (NB,) i32
-    indptr: jax.Array   # (NF+1,) i32
-    k: int = dataclasses.field(metadata=dict(static=True))
-    f: int = dataclasses.field(metadata=dict(static=True))
-    tk: int = dataclasses.field(metadata=dict(static=True))
-    tf: int = dataclasses.field(metadata=dict(static=True))
-
-    @property
-    def density(self) -> float:
-        nbk, nbf = self.k // self.tk, self.f // self.tf
-        return self.blocks.shape[0] / float(nbk * nbf)
-
-
-def bsr_pack(w: np.ndarray, tk: int = 128, tf: int = 128, threshold: float = 0.0) -> BsrWeight:
-    """Pack a dense (K, F) weight into BSR, dropping all-(|w|<=threshold)
-    blocks. Blocks sorted by block-col then block-row (CSC-ish over output
-    tiles, matching the kernel's pointer walk)."""
-    k, f = w.shape
-    if k % tk or f % tf:
-        raise ValueError("weight dims must be multiples of the block tile")
-    nbk, nbf = k // tk, f // tf
-    wb = w.reshape(nbk, tk, nbf, tf).transpose(0, 2, 1, 3)  # (nbk, nbf, tk, tf)
-    keep = np.abs(wb).max(axis=(2, 3)) > threshold          # (nbk, nbf)
-    br, bc = np.nonzero(keep)
-    order = np.lexsort((br, bc))
-    br, bc = br[order], bc[order]
-    blocks = wb[br, bc]                                     # (NB, tk, tf)
-    indptr = np.zeros(nbf + 1, np.int32)
-    np.cumsum(np.bincount(bc, minlength=nbf), out=indptr[1:])
-    return BsrWeight(
-        blocks=jnp.asarray(blocks.astype(np.float32)),
-        brow=jnp.asarray(br.astype(np.int32)),
-        indptr=jnp.asarray(indptr),
-        k=k, f=f, tk=tk, tf=tf,
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("impl", "tb", "interpret"))
 def bsr_matmul(
     x: jax.Array,
     w: BsrWeight,
@@ -226,21 +93,14 @@ def bsr_matmul(
     tb: int = 128,
     interpret: bool = True,
 ) -> jax.Array:
-    """y = x @ W for block-sparse W; x: (..., K) -> (..., F)."""
+    """Deprecated: y = x @ W for block-sparse W; x: (..., K) -> (..., F).
+    Routes through spmm on the transposed view (W^T @ x^T)^T."""
+    from repro.sparse_api import spmm
+
+    _deprecated("bsr_matmul", "repro.sparse_api.spmm")
+    a = from_bsr_weight(w)                        # W^T, shape (F, K)
     lead = x.shape[:-1]
     xb = x.reshape(-1, w.k)
-    bsz = xb.shape[0]
-    if impl == "jnp":
-        y = ref_ops.bsr_matmul_ref(
-            xb, w.blocks, w.brow,
-            jnp.searchsorted(w.indptr, jnp.arange(w.blocks.shape[0]), side="right") - 1,
-            w.k // w.tk, w.f // w.tf,
-        )
-    else:
-        bpad = cdiv(bsz, tb) * tb
-        xp = jnp.pad(xb, ((0, bpad - bsz), (0, 0)))
-        y = bsr_matmul_pallas(
-            xp, w.blocks, w.brow, w.indptr,
-            tb=tb, tk=w.tk, tf=w.tf, interpret=interpret,
-        )[:bsz]
+    opts = {"tn": tb, "interpret": interpret} if impl != "jnp" else {}
+    y = spmm(a, xb.T, backend=impl, **opts).T     # (B, F)
     return y.reshape(*lead, w.f)

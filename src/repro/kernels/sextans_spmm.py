@@ -15,7 +15,10 @@ TPU re-derivation of the paper's streaming dataflow (DESIGN.md §2):
   operand driving data-dependent ``fori_loop`` trip counts — the paper's
   HFlex pointer list Q;
 * the α/β epilogue is fused into the last window step (the paper's CompC
-  module, without the extra C stream).
+  module, without the extra C stream). α/β arrive as a *traced* (1, 2)
+  SMEM operand, not compile-time constants: one compiled executable
+  serves any epilogue scaling (HFlex — the hardware reads α/β from
+  registers, it is not re-synthesized per scaling).
 
 Two gather strategies for B rows:
 
@@ -39,6 +42,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ._compat import CompilerParams as _CompilerParams
+
 __all__ = ["sextans_spmm_pallas"]
 
 
@@ -49,6 +54,7 @@ def _kernel(
     rows_ref,         # (1, 1, LW) i32
     b_ref,            # (K0, TN)
     cin_ref,          # (TM, TN)
+    ab_ref,           # (1, 2) f32 in SMEM: [alpha, beta] (traced epilogue)
     out_ref,          # (TM, TN)
     acc_ref,          # VMEM scratch (TM, TN) f32
     *,
@@ -56,8 +62,6 @@ def _kernel(
     k0: int,
     chunk: int,
     nw: int,
-    alpha: float,
-    beta: float,
     gather: str,
 ):
     w = pl.program_id(2)
@@ -102,6 +106,8 @@ def _kernel(
 
     @pl.when(w == nw - 1)
     def _epilogue():
+        alpha = ab_ref[0, 0]
+        beta = ab_ref[0, 1]
         out_ref[...] = (
             alpha * acc_ref[...] + beta * cin_ref[...].astype(jnp.float32)
         ).astype(out_ref.dtype)
@@ -109,7 +115,7 @@ def _kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("tm", "k0", "chunk", "tn", "alpha", "beta", "gather", "interpret"),
+    static_argnames=("tm", "k0", "chunk", "tn", "gather", "interpret"),
 )
 def sextans_spmm_pallas(
     vals: jax.Array,      # (MB, NW, LW) f32
@@ -118,18 +124,22 @@ def sextans_spmm_pallas(
     q: jax.Array,         # (MB, NW) i32
     b: jax.Array,         # (NW*K0, N_pad)
     c_in: jax.Array,      # (MB*TM, N_pad)
+    alpha: jax.Array = 1.0,   # traced scalar
+    beta: jax.Array = 0.0,    # traced scalar
     *,
     tm: int,
     k0: int,
     chunk: int,
     tn: int = 128,
-    alpha: float = 1.0,
-    beta: float = 0.0,
     gather: str = "gather",
     interpret: bool = True,
 ) -> jax.Array:
-    """Raw kernel entry on pre-padded operands. Use ops.sextans_spmm for the
-    user-facing API (handles packing, padding, permutation)."""
+    """Raw kernel entry on pre-padded operands. Use repro.sparse_api.spmm for
+    the user-facing API (handles packing, padding, permutation, autodiff).
+
+    ``alpha``/``beta`` are *dynamic* operands (delivered to the kernel as a
+    (1, 2) SMEM block): sweeping them re-uses one compiled executable.
+    """
     mb, nw, lw = vals.shape
     kpad, npad = b.shape
     assert kpad == nw * k0, (kpad, nw, k0)
@@ -137,10 +147,13 @@ def sextans_spmm_pallas(
     assert npad % tn == 0
     nt = npad // tn
 
+    ab = jnp.stack(
+        [jnp.asarray(alpha, jnp.float32), jnp.asarray(beta, jnp.float32)]
+    ).reshape(1, 2)
+
     kern = functools.partial(
         _kernel,
-        tm=tm, k0=k0, chunk=chunk, nw=nw,
-        alpha=float(alpha), beta=float(beta), gather=gather,
+        tm=tm, k0=k0, chunk=chunk, nw=nw, gather=gather,
     )
     grid = (mb, nt, nw)
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -152,6 +165,8 @@ def sextans_spmm_pallas(
             pl.BlockSpec((1, 1, lw), lambda m, n, w, q_: (m, w, 0)),
             pl.BlockSpec((k0, tn), lambda m, n, w, q_: (w, n)),
             pl.BlockSpec((tm, tn), lambda m, n, w, q_: (m, n)),
+            pl.BlockSpec((1, 2), lambda m, n, w, q_: (0, 0),
+                         memory_space=pltpu.SMEM),
         ],
         out_specs=pl.BlockSpec((tm, tn), lambda m, n, w, q_: (m, n)),
         scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
@@ -161,7 +176,7 @@ def sextans_spmm_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((mb * tm, npad), b.dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
-    )(q, vals, cols, rows, b, c_in)
+    )(q, vals, cols, rows, b, c_in, ab)

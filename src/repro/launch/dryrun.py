@@ -116,6 +116,8 @@ def run_cell(arch: str, shape: str, mesh_kind: str, extra: dict | None = None) -
     t_compile = time.time() - t0 - t_lower
 
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):                 # older jax: per-device list
+        ca = ca[0] if ca else {}
     ma = compiled.memory_analysis()
     hlo = compiled.as_text()
     # trip-count-aware reconstruction (cost_analysis counts loop bodies once)

@@ -13,15 +13,21 @@ import jax
 __all__ = ["make_production_mesh", "make_mesh_for"]
 
 
+def _axis_types_kwargs(n: int) -> dict:
+    """jax.sharding.AxisType appeared after 0.4.x; omit on older jax (the
+    default there is the equivalent Auto behavior)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips, axes (data, model).
     Multi-pod: 2x16x16 = 512 chips, axes (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
 
 
 def make_mesh_for(n_devices: int, model_parallel: int = 1):
@@ -33,5 +39,5 @@ def make_mesh_for(n_devices: int, model_parallel: int = 1):
     return jax.make_mesh(
         (data, model_parallel), ("data", "model"),
         devices=devs,
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
+        **_axis_types_kwargs(2),
     )

@@ -24,6 +24,7 @@ __all__ = [
     "mesh_context", "constrain",
     "linear", "rmsnorm_init", "rmsnorm", "rope", "attention_init", "attention_apply",
     "decode_attention_apply", "ffn_init", "ffn_apply", "moe_init", "moe_apply",
+    "SparseLinear",
 ]
 
 # ---------------------------------------------------------------------------
@@ -604,3 +605,72 @@ def moe_apply(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array) -> jax.Array:
     if cfg.shared_expert:
         y = y + ffn_apply(p["shared"], cfg, x)
     return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# SparseLinear: trainable block-sparse projection on the unified sparse API
+# ---------------------------------------------------------------------------
+
+
+class SparseLinear:
+    """``y = x @ W`` for a block-pruned weight, on ``repro.sparse_api``.
+
+    The sparsity *structure* (kept blocks, pointer lists) is static and
+    lives on this object as a :class:`~repro.sparse_api.SparseTensor`
+    skeleton of shape (d_out, d_in) — i.e. ``W^T`` in the spmm left-operand
+    orientation.  The trainable payload is the plain ``(NB, TK, TF)`` float
+    array returned from :meth:`create` as ``params["w"]``: it flows through
+    the existing AdamW/ZeRO machinery untouched, and because ``spmm`` is
+    differentiable (``jax.custom_vjp``), pruned layers *train* — gradients
+    reach exactly the stored blocks.
+    """
+
+    def __init__(self, skeleton):
+        self.skeleton = skeleton                 # SparseTensor (d_out, d_in)
+
+    @property
+    def d_in(self) -> int:
+        return self.skeleton.shape[1]
+
+    @property
+    def d_out(self) -> int:
+        return self.skeleton.shape[0]
+
+    @property
+    def density(self) -> float:
+        return self.skeleton.density
+
+    @classmethod
+    def create(cls, init: Initializer, d_in: int, d_out: int,
+               block: Tuple[int, int] = (128, 128),
+               density: float = 0.5) -> Tuple["SparseLinear", Dict[str, Any]]:
+        """Init a dense weight, keep the top-``density`` fraction of
+        (block x block) tiles by L2 norm, pack the survivors.  Returns
+        (layer, params) with ``params["w"]`` the trainable block values."""
+        import numpy as np
+
+        from repro.sparse_api import Format, from_dense
+
+        bi, bo = block
+        if d_in % bi or d_out % bo:
+            raise ValueError("d_in/d_out must be multiples of the block tile")
+        w = np.asarray(init.dense(d_in, d_out), np.float32)
+        norms = np.linalg.norm(
+            w.reshape(d_in // bi, bi, d_out // bo, bo), axis=(1, 3))
+        keep_n = max(1, int(round(density * norms.size)))
+        thresh = np.sort(norms.reshape(-1))[-keep_n]
+        mask = norms >= thresh
+        w = (w.reshape(d_in // bi, bi, d_out // bo, bo)
+             * mask[:, None, :, None]).reshape(d_in, d_out)
+        skeleton = from_dense(w.T, format=Format.BSR, block=(bo, bi))
+        return cls(skeleton), {"w": skeleton.values}
+
+    def __call__(self, params: Dict[str, Any], x: jax.Array, *,
+                 backend: str = "auto", **opts) -> jax.Array:
+        from repro.sparse_api import spmm
+
+        a = self.skeleton.with_values(params["w"])
+        lead = x.shape[:-1]
+        xb = x.reshape(-1, self.d_in)
+        y = spmm(a, xb.T, backend=backend, **opts).T      # (B, d_out)
+        return y.reshape(*lead, self.d_out)

@@ -1,0 +1,59 @@
+"""repro.sparse_api — the unified sparse front-end.
+
+One differentiable, format-agnostic SpMM:
+
+    >>> import repro.sparse_api as sp
+    >>> A = sp.from_dense(a_np)                   # or from_coo / from_sparse_matrix
+    >>> y = sp.spmm(A, b, c, alpha=1.0, beta=0.5) # traced alpha/beta
+    >>> y = A @ b                                 # operator sugar
+    >>> g = jax.grad(lambda v: sp.spmm(A.with_values(v), b).sum())(A.values)
+
+Formats (``Format.HFLEX`` slabs, ``Format.BSR`` tiles) and execution
+backends (``pallas``, ``pallas_onehot``, ``jnp``, ``auto``) are orthogonal;
+new ones plug in through :func:`register_backend`.
+"""
+
+from .backends import (
+    BACKEND_STATS,
+    Backend,
+    get_backend,
+    list_backends,
+    register_backend,
+    resolve_backend,
+    set_auto_policy,
+)
+from .ops import spmm, spmm_raw
+from .tensor import (
+    BsrWeight,
+    Format,
+    PackedSpMM,
+    SparseTensor,
+    from_bsr_weight,
+    from_coo,
+    from_dense,
+    from_sparse_matrix,
+    pack_bsr_weight,
+    pack_hflex,
+)
+
+__all__ = [
+    "Format",
+    "SparseTensor",
+    "PackedSpMM",
+    "BsrWeight",
+    "spmm",
+    "spmm_raw",
+    "from_coo",
+    "from_dense",
+    "from_sparse_matrix",
+    "from_bsr_weight",
+    "pack_hflex",
+    "pack_bsr_weight",
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "resolve_backend",
+    "set_auto_policy",
+    "BACKEND_STATS",
+]

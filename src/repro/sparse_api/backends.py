@@ -1,0 +1,263 @@
+"""SpMM backend registry: pluggable execution strategies for SparseTensor.
+
+A *backend* is a callable ``fn(A, b, c, alpha, beta, **opts) -> jax.Array``
+computing ``alpha * A @ b + beta * c`` on padded-consistent operands, where
+``alpha``/``beta`` are traced scalars (no recompile per value — HFlex).
+Backends declare which :class:`Format` s they support and are registered by
+name:
+
+* ``pallas``        — Sextans streaming kernel (HFLEX) / BSR tile kernel,
+                      vector row-gather.
+* ``pallas_onehot`` — Sextans kernel with pure-MXU one-hot gather
+                      (guaranteed-lowerable on any MXU; HFLEX only).
+* ``jnp``           — segment-sum / einsum XLA path; also the CPU
+                      production path and the autodiff reference.
+* ``auto``          — resolves to one of the above from platform, format and
+                      density (override with :func:`set_auto_policy`).
+
+``register_backend`` is the extension point the ROADMAP's multi-workload
+north star needs: a Serpens-style SpMV/CSR or SpArch-style merge format
+plugs in as (new Format, new backend) without another API fork.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, FrozenSet, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import cdiv
+from repro.kernels.bsr_spmm import bsr_matmul_pallas
+from repro.kernels.ref import bsr_matmul_ref, spmm_slabs_ref
+from repro.kernels.sextans_spmm import sextans_spmm_pallas
+
+from .tensor import Format, SparseTensor
+
+__all__ = [
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "list_backends",
+    "resolve_backend",
+    "set_auto_policy",
+    "BACKEND_STATS",
+]
+
+# Incremented once per *trace* of a backend body (i.e. per compiled
+# executable, not per call) — the JAX analogue of the paper counting
+# avoided synthesis/place/route runs.  Tests assert alpha/beta sweeps do
+# not grow this.
+BACKEND_STATS: Dict[str, int] = {"traces": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    fn: Callable
+    formats: FrozenSet[Format]
+    description: str = ""
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(
+    name: str,
+    fn: Callable,
+    formats=(Format.HFLEX, Format.BSR),
+    description: str = "",
+    overwrite: bool = False,
+) -> Backend:
+    """Register an SpMM execution strategy under ``name``.
+
+    ``fn(A: SparseTensor, b, c, alpha, beta, **opts) -> jax.Array`` must be
+    traceable (it runs under jit with traced alpha/beta).
+    """
+    if name == "auto":
+        raise ValueError("'auto' is reserved; use set_auto_policy to change "
+                         "auto dispatch")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    be = Backend(name=name, fn=fn, formats=frozenset(formats),
+                 description=description)
+    _REGISTRY[name] = be
+    return be
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def list_backends() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def _default_auto_policy(a: SparseTensor, b, platform: Optional[str] = None) -> str:
+    """Pick a backend from platform / format / density.
+
+    * off-TPU the Pallas kernels run in interpret mode — the XLA ``jnp``
+      path is the production one;
+    * on TPU, BSR always goes to the tile kernel;
+    * dense-ish unstructured matrices (density > 0.25) blow up slab padding,
+      so they fall back to the XLA path too.
+    """
+    platform = platform or jax.default_backend()
+    if platform != "tpu":
+        return "jnp"
+    if a.format is Format.BSR:
+        return "pallas"
+    if a.density > 0.25:
+        return "jnp"
+    return "pallas"
+
+
+_AUTO_POLICY = _default_auto_policy
+
+
+def set_auto_policy(policy: Optional[Callable]) -> None:
+    """Replace the ``auto`` dispatch heuristic (None restores the default).
+
+    ``policy(a, b, platform=None) -> name`` must tolerate ``b=None``:
+    resolution can happen before the dense operand exists (e.g. when
+    SextansEngine builds a sharded executable for a future N)."""
+    global _AUTO_POLICY
+    _AUTO_POLICY = policy or _default_auto_policy
+
+
+def resolve_backend(name: str, a: SparseTensor, b=None,
+                    platform: Optional[str] = None) -> str:
+    """Resolve a requested backend name ('auto' included) for tensor ``a``,
+    validating format support.  ``b`` may be None (pre-operand resolution)."""
+    if name == "auto":
+        name = _AUTO_POLICY(a, b, platform)
+    be = get_backend(name)
+    if a.format not in be.formats:
+        raise ValueError(
+            f"backend {name!r} does not support format {a.format}; "
+            f"supported: {sorted(f.value for f in be.formats)}")
+    return name
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends
+# ---------------------------------------------------------------------------
+
+
+def _permute_rows_fwd(x: jax.Array, mb: int, tm: int) -> jax.Array:
+    """true-row layout -> interleaved block layout (r -> (r%mb)*tm + r//mb)."""
+    n = x.shape[1]
+    return x.reshape(tm, mb, n).transpose(1, 0, 2).reshape(mb * tm, n)
+
+
+def _permute_rows_inv(x: jax.Array, mb: int, tm: int) -> jax.Array:
+    n = x.shape[1]
+    return x.reshape(mb, tm, n).transpose(1, 0, 2).reshape(tm * mb, n)
+
+
+def _hflex_jnp(a: SparseTensor, b, c, alpha, beta):
+    """XLA segment-sum path on the slab format (no padding of N)."""
+    d = a.data
+    m, k, tm, k0, mb, nw = d.m, d.k, d.tm, d.k0, d.mb, d.nw
+    cin = jnp.pad(c, ((0, mb * tm - m), (0, 0)))
+    if d.interleaved:
+        cin = _permute_rows_fwd(cin, mb, tm)
+    bp = jnp.pad(b, ((0, nw * k0 - k), (0, 0)))
+    out = spmm_slabs_ref(d.vals, d.cols, d.rows, d.q, bp, cin,
+                         k0, tm, alpha, beta)
+    if d.interleaved:
+        out = _permute_rows_inv(out, mb, tm)
+    return out[:m]
+
+
+def _hflex_pallas(a: SparseTensor, b, c, alpha, beta, *, gather, tn, interpret):
+    d = a.data
+    m, k, tm, k0, mb, nw = d.m, d.k, d.tm, d.k0, d.mb, d.nw
+    n = b.shape[1]
+    npad = cdiv(n, tn) * tn
+    bp = jnp.pad(b, ((0, nw * k0 - k), (0, npad - n)))
+    cp = jnp.pad(c, ((0, mb * tm - m), (0, npad - n)))
+    if d.interleaved:
+        cp = _permute_rows_fwd(cp, mb, tm)
+    out = sextans_spmm_pallas(
+        d.vals, d.cols, d.rows, d.q, bp, cp, alpha, beta,
+        tm=tm, k0=k0, chunk=d.chunk, tn=tn, gather=gather,
+        interpret=interpret,
+    )
+    if d.interleaved:
+        out = _permute_rows_inv(out, mb, tm)
+    return out[:m, :n]
+
+
+def _bsr_raw_jnp(a: SparseTensor, b):
+    """A @ b for BSR: (b^T @ A^T)^T on the stored transposed-weight layout."""
+    w = a.data
+    m, k = a.shape
+    xb = jnp.pad(b, ((0, w.k - k), (0, 0))).T        # (N, K')
+    bcol = jnp.searchsorted(
+        w.indptr, jnp.arange(w.blocks.shape[0]), side="right") - 1
+    y = bsr_matmul_ref(xb, w.blocks, w.brow, bcol,
+                       w.k // w.tk, w.f // w.tf)     # (N, M')
+    return y.T[:m]
+
+
+def _bsr_jnp(a: SparseTensor, b, c, alpha, beta):
+    raw = _bsr_raw_jnp(a, b).astype(jnp.float32)
+    return (alpha * raw + beta * c.astype(jnp.float32)).astype(b.dtype)
+
+
+def _bsr_pallas(a: SparseTensor, b, c, alpha, beta, *, tn, interpret):
+    w = a.data
+    m, k = a.shape
+    n = b.shape[1]
+    xb = jnp.pad(b, ((0, w.k - k), (0, 0))).T        # (N, K')
+    npad = cdiv(n, tn) * tn
+    xb = jnp.pad(xb, ((0, npad - n), (0, 0)))
+    y = bsr_matmul_pallas(xb, w.blocks, w.brow, w.indptr,
+                          tb=tn, tk=w.tk, tf=w.tf, interpret=interpret)
+    raw = y[:n].T[:m].astype(jnp.float32)            # (M, N)
+    return (alpha * raw + beta * c.astype(jnp.float32)).astype(b.dtype)
+
+
+def _backend_jnp(a, b, c, alpha, beta, **_unused):
+    BACKEND_STATS["traces"] += 1
+    if a.format is Format.HFLEX:
+        return _hflex_jnp(a, b, c, alpha, beta)
+    return _bsr_jnp(a, b, c, alpha, beta)
+
+
+def _backend_pallas(a, b, c, alpha, beta, *, gather="gather", tn=128,
+                    interpret=True, **_unused):
+    BACKEND_STATS["traces"] += 1
+    if a.format is Format.HFLEX:
+        return _hflex_pallas(a, b, c, alpha, beta, gather=gather, tn=tn,
+                             interpret=interpret)
+    return _bsr_pallas(a, b, c, alpha, beta, tn=tn, interpret=interpret)
+
+
+def _backend_pallas_onehot(a, b, c, alpha, beta, *, tn=128, interpret=True,
+                           **_unused):
+    BACKEND_STATS["traces"] += 1
+    return _hflex_pallas(a, b, c, alpha, beta, gather="onehot", tn=tn,
+                         interpret=interpret)
+
+
+register_backend(
+    "pallas", _backend_pallas,
+    formats=(Format.HFLEX, Format.BSR),
+    description="Sextans streaming kernel / BSR tile kernel (row-gather)")
+register_backend(
+    "pallas_onehot", _backend_pallas_onehot,
+    formats=(Format.HFLEX,),
+    description="Sextans kernel, pure-MXU one-hot gather")
+register_backend(
+    "jnp", _backend_jnp,
+    formats=(Format.HFLEX, Format.BSR),
+    description="XLA segment-sum/einsum path (CPU production + autodiff ref)")

@@ -1,0 +1,151 @@
+"""The unified, differentiable SpMM entry point.
+
+``spmm(A, b, c=None, alpha=1.0, beta=0.0, backend="auto")`` computes
+``alpha * A @ b + beta * c`` for any :class:`SparseTensor` format through
+the backend registry.  Three properties the legacy ``sextans_spmm`` /
+``bsr_matmul`` pair lacked:
+
+1. **Traced epilogue** — ``alpha``/``beta`` are dynamic f32 scalars all the
+   way into the kernel's SMEM, so sweeping them reuses one compiled
+   executable (HFlex semantics; see the recompile-count test).
+2. **Differentiable** — a ``jax.custom_vjp`` routes cotangents to ``b``,
+   ``c``, ``alpha``/``beta`` and the packed non-zero values (``A.values``),
+   regardless of which backend ran the forward.  The backward pass is the
+   VJP of the XLA reference path (the standard surrogate-gradient pattern
+   for opaque kernels), which opens sparse-layer *training*.
+3. **Format-agnostic** — HFlex slabs and BSR tiles go through the same call;
+   new formats plug in via ``register_backend``.
+
+Gradient w.r.t. ``A.values`` only flows to *stored* non-zeros: the sparsity
+structure (including slab padding slots, which hold exact 0.0) is treated
+as constant, matching the semantics of training a pruned layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import backends as _bk
+from .tensor import Format, SparseTensor
+
+__all__ = ["spmm", "spmm_raw"]
+
+
+def _raw_reference(a: SparseTensor, b: jax.Array) -> jax.Array:
+    """A @ b through the XLA path (differentiable-by-construction)."""
+    zeros = jnp.zeros((a.shape[0], b.shape[1]), b.dtype)
+    one = jnp.asarray(1.0, jnp.float32)
+    zero = jnp.asarray(0.0, jnp.float32)
+    if a.format is Format.HFLEX:
+        return _bk._hflex_jnp(a, b, zeros, one, zero)
+    return _bk._bsr_jnp(a, b, zeros, one, zero)
+
+
+def _run_backend(name, okey, a, b, c, alpha, beta):
+    return _bk.get_backend(name).fn(a, b, c, alpha, beta, **dict(okey))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _spmm_core(name, okey, a, b, c, alpha, beta):
+    return _run_backend(name, okey, a, b, c, alpha, beta)
+
+
+def _spmm_fwd(name, okey, a, b, c, alpha, beta):
+    out = _run_backend(name, okey, a, b, c, alpha, beta)
+    return out, (a, b, c, alpha, beta)
+
+
+def _float0_zeros(x):
+    if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+        return jnp.zeros_like(x)
+    return np.zeros(jnp.shape(x), dtype=jax.dtypes.float0)
+
+
+def _spmm_bwd(name, okey, res, g):
+    a, b, c, alpha, beta = res
+    g32 = g.astype(jnp.float32)
+
+    def raw_fn(vals, b_):
+        return _raw_reference(a.with_values(vals), b_)
+
+    raw, vjp = jax.vjp(raw_fn, a.values, b)
+    ct = (alpha * g32).astype(raw.dtype)
+    dvals, db = vjp(ct)
+
+    if a.format is Format.HFLEX:
+        # Padding slots (position >= true per-slab count) are structural:
+        # their primal value is exactly 0.0 and must stay 0.0 under training,
+        # but the reference computes d out/d val_pad = alpha*g[row0]*b[col0]
+        # != 0 for them.  Mask by the true counts carried in the packing.
+        d = a.data
+        valid = (jax.lax.broadcasted_iota(jnp.int32, d.vals.shape, 2)
+                 < d.nse[:, :, None])
+        dvals = jnp.where(valid, dvals, 0)
+    # BSR tile-padding cells need no mask: padded b rows are zero and
+    # out-of-bounds output columns have zero cotangent, so their grads
+    # vanish by construction.
+
+    dc = (beta * g32).astype(c.dtype)
+    dalpha = jnp.sum(g32 * raw.astype(jnp.float32)).astype(alpha.dtype)
+    dbeta = jnp.sum(g32 * c.astype(jnp.float32)).astype(beta.dtype)
+
+    da = jax.tree.map(_float0_zeros, a).with_values(dvals.astype(a.values.dtype))
+    return (da, db.astype(b.dtype), dc, dalpha, dbeta)
+
+
+_spmm_core.defvjp(_spmm_fwd, _spmm_bwd)
+
+_spmm_jit = jax.jit(_spmm_core, static_argnums=(0, 1))
+
+
+def spmm_raw(backend_name: str, a: SparseTensor, b, c, alpha, beta, **opts):
+    """Un-jitted dispatch core (still differentiable) — for composing into
+    outer jits with explicit shardings (see SextansEngine.sharded_spmm_fn)."""
+    okey = tuple(sorted(opts.items()))
+    return _spmm_core(backend_name, okey, a, b, c,
+                      jnp.asarray(alpha, jnp.float32),
+                      jnp.asarray(beta, jnp.float32))
+
+
+def spmm(
+    a: SparseTensor,
+    b,
+    c=None,
+    alpha=1.0,
+    beta=0.0,
+    *,
+    backend: str = "auto",
+    **opts,
+) -> jax.Array:
+    """``alpha * A @ b + beta * c`` for a device SparseTensor ``A``.
+
+    Args:
+      a: SparseTensor of shape (M, K), any registered format.
+      b: dense (K, N) array.
+      c: optional dense (M, N) array (defaults to zeros).
+      alpha, beta: epilogue scalars — *traced*; sweeping them does not
+        recompile.
+      backend: a registered backend name, or "auto" (platform/format/density
+        heuristic; see ``repro.sparse_api.backends``).
+      **opts: static backend options (e.g. ``tn``, ``interpret``) — part of
+        the executable identity.
+    """
+    if not isinstance(a, SparseTensor):
+        raise TypeError(f"spmm expects a SparseTensor, got {type(a).__name__}")
+    b = jnp.asarray(b)
+    if b.ndim != 2:
+        raise ValueError(f"b must be 2-D (K, N), got shape {b.shape}")
+    m, k = a.shape
+    if b.shape[0] != k:
+        raise ValueError(f"B rows {b.shape[0]} != A cols {k}")
+    c_ = jnp.zeros((m, b.shape[1]), b.dtype) if c is None else jnp.asarray(c)
+    name = _bk.resolve_backend(backend, a, b)
+    okey = tuple(sorted(opts.items()))
+    return _spmm_jit(name, okey, a, b, c_,
+                     jnp.asarray(alpha, jnp.float32),
+                     jnp.asarray(beta, jnp.float32))

@@ -1,0 +1,383 @@
+"""Device-resident sparse tensors: one front-end over every packed format.
+
+``SparseTensor`` is the single user-facing sparse-matrix abstraction.  It is
+a registered JAX pytree (survives ``jax.jit`` / ``jax.grad`` / sharding
+boundaries) that wraps one of the packed device formats behind a
+:class:`Format` tag:
+
+* ``Format.HFLEX`` — the paper's HFlex slab packing (:class:`PackedSpMM`):
+  per-(TM-row-block, K0-window) non-zero slabs plus the scalar-prefetched
+  pointer matrix ``q``.  The general-purpose unstructured-sparsity format.
+* ``Format.BSR``   — block-sparse rows (:class:`BsrWeight`): (TK x TF) dense
+  tiles feeding the MXU, for pruned model weights.
+
+Both execute through one entry point, :func:`repro.sparse_api.spmm`
+(``C = alpha * A @ B + beta * C``), dispatched through the backend registry
+(:mod:`repro.sparse_api.backends`).
+
+Orientation convention for BSR: a ``SparseTensor`` always denotes the *left*
+operand ``A`` of shape ``(M, K)``.  Internally the BSR payload stores
+``A^T`` in the weight layout of :func:`pack_bsr_weight` (blocks sorted by
+output tile), because the BSR kernel computes ``x @ W``; the spmm backends
+apply ``A @ B = (B^T @ A^T)^T``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hflex import BlockSlabs, bucket_geometry, pack_block_slabs
+from repro.core.partition import cdiv
+from repro.core.sparse import SparseMatrix
+from repro.core.sparse import from_dense as _coo_from_dense
+
+__all__ = [
+    "Format",
+    "PackedSpMM",
+    "BsrWeight",
+    "SparseTensor",
+    "pack_hflex",
+    "pack_bsr_weight",
+    "from_sparse_matrix",
+    "from_coo",
+    "from_dense",
+    "from_bsr_weight",
+]
+
+
+class Format(enum.Enum):
+    """Packed device format of a :class:`SparseTensor`."""
+
+    HFLEX = "hflex"   # Sextans slab packing — unstructured sparsity
+    BSR = "bsr"       # block-sparse tiles — structured (pruned-weight) sparsity
+
+
+# ---------------------------------------------------------------------------
+# Packed payloads (registered pytrees)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedSpMM:
+    """Device-resident HFlex-packed sparse matrix (slab format)."""
+
+    vals: jax.Array  # (MB, NW, LW) f32
+    cols: jax.Array  # (MB, NW, LW) i32
+    rows: jax.Array  # (MB, NW, LW) i32
+    q: jax.Array     # (MB, NW) i32, chunk-ceiled counts (kernel trip counts)
+    nse: jax.Array   # (MB, NW) i32, true counts (autodiff padding mask)
+    m: int = dataclasses.field(metadata=dict(static=True))
+    k: int = dataclasses.field(metadata=dict(static=True))
+    tm: int = dataclasses.field(metadata=dict(static=True))
+    k0: int = dataclasses.field(metadata=dict(static=True))
+    chunk: int = dataclasses.field(metadata=dict(static=True))
+    interleaved: bool = dataclasses.field(metadata=dict(static=True))
+    nnz: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def mb(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def nw(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def lw(self) -> int:
+        return self.vals.shape[2]
+
+    @property
+    def geometry(self) -> Tuple[int, int, int]:
+        return (self.mb, self.nw, self.lw)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BsrWeight:
+    """Block-sparse (K, F) weight: nonzero (TK, TF) tiles, CSC over F tiles."""
+
+    blocks: jax.Array   # (NB, TK, TF)
+    brow: jax.Array     # (NB,) i32
+    indptr: jax.Array   # (NF+1,) i32
+    k: int = dataclasses.field(metadata=dict(static=True))
+    f: int = dataclasses.field(metadata=dict(static=True))
+    tk: int = dataclasses.field(metadata=dict(static=True))
+    tf: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def density(self) -> float:
+        nbk, nbf = self.k // self.tk, self.f // self.tf
+        return self.blocks.shape[0] / float(max(nbk * nbf, 1))
+
+
+# ---------------------------------------------------------------------------
+# Host-side packing
+# ---------------------------------------------------------------------------
+
+
+def pack_hflex(
+    a: SparseMatrix,
+    tm: int = 128,
+    k0: int = 4096,
+    chunk: int = 8,
+    interleave: bool = True,
+    bucket: bool = False,
+) -> PackedSpMM:
+    """Host preprocessing -> device slab arrays. ``bucket=True`` rounds LW up
+    to a power of two so matrices of similar density share one compiled
+    kernel (HFlex compile-cache)."""
+    slabs = pack_block_slabs(a, tm=tm, k0=k0, chunk=chunk, interleave=interleave)
+    lw = slabs.lw
+    if bucket:
+        _, _, lw_b, _ = bucket_geometry(slabs.mb, slabs.nw, slabs.lw, 1)
+        if lw_b > lw:
+            pad = lw_b - lw
+            slabs = BlockSlabs(
+                m=slabs.m, k=slabs.k, tm=tm, k0=k0, chunk=chunk,
+                vals=np.pad(slabs.vals, ((0, 0), (0, 0), (0, pad))),
+                cols=np.pad(slabs.cols, ((0, 0), (0, 0), (0, pad))),
+                rows=np.pad(slabs.rows, ((0, 0), (0, 0), (0, pad))),
+                q=slabs.q, nnz=slabs.nnz, nse=slabs.nse,
+            )
+    nse = slabs.nse if slabs.nse is not None else np.minimum(
+        (slabs.vals != 0).sum(-1), slabs.q)
+    return PackedSpMM(
+        vals=jnp.asarray(slabs.vals),
+        cols=jnp.asarray(slabs.cols),
+        rows=jnp.asarray(slabs.rows),
+        q=jnp.asarray(slabs.q),
+        nse=jnp.asarray(nse, jnp.int32),
+        m=slabs.m, k=slabs.k, tm=tm, k0=k0, chunk=chunk,
+        interleaved=bool(getattr(slabs, "interleaved", interleave and slabs.mb > 1)),
+        nnz=slabs.nnz,
+    )
+
+
+def pack_bsr_weight(
+    w: np.ndarray, tk: int = 128, tf: int = 128, threshold: float = 0.0
+) -> BsrWeight:
+    """Pack a dense (K, F) weight into BSR, dropping all-(|w|<=threshold)
+    blocks. Blocks sorted by block-col then block-row (CSC-ish over output
+    tiles, matching the kernel's pointer walk)."""
+    w = np.asarray(w)
+    k, f = w.shape
+    if k % tk or f % tf:
+        raise ValueError("weight dims must be multiples of the block tile")
+    nbk, nbf = k // tk, f // tf
+    wb = w.reshape(nbk, tk, nbf, tf).transpose(0, 2, 1, 3)  # (nbk, nbf, tk, tf)
+    keep = np.abs(wb).max(axis=(2, 3)) > threshold          # (nbk, nbf)
+    br, bc = np.nonzero(keep)
+    order = np.lexsort((br, bc))
+    br, bc = br[order], bc[order]
+    blocks = wb[br, bc]                                     # (NB, tk, tf)
+    indptr = np.zeros(nbf + 1, np.int32)
+    np.cumsum(np.bincount(bc, minlength=nbf), out=indptr[1:])
+    return BsrWeight(
+        blocks=jnp.asarray(blocks.astype(np.float32)),
+        brow=jnp.asarray(br.astype(np.int32)),
+        indptr=jnp.asarray(indptr),
+        k=k, f=f, tk=tk, tf=tf,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SparseTensor
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseTensor:
+    """Format-agnostic device sparse matrix ``A`` of shape ``(M, K)``.
+
+    Execute ``C = alpha * A @ B + beta * C`` via :func:`repro.sparse_api.spmm`
+    or simply ``A @ B``.  The op is differentiable (cotangents flow to ``B``,
+    ``C`` and the packed non-zero values), and ``alpha``/``beta`` are traced
+    scalars — one compiled executable serves any epilogue.
+    """
+
+    data: Any   # PackedSpMM (HFLEX) | BsrWeight storing A^T (BSR)
+    format: Format = dataclasses.field(metadata=dict(static=True))
+    shape: Tuple[int, int] = dataclasses.field(metadata=dict(static=True))
+    # stored elements inside the logical (M, K) bounds; None -> derive from
+    # the payload (BSR payloads may carry tile-padding cells outside bounds)
+    nse: Optional[int] = dataclasses.field(default=None,
+                                           metadata=dict(static=True))
+
+    # -- structure ----------------------------------------------------------
+
+    @property
+    def m(self) -> int:
+        return self.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        if self.nse is not None:
+            return self.nse
+        if self.format is Format.HFLEX:
+            return self.data.nnz
+        nb, tk, tf = self.data.blocks.shape
+        return int(nb * tk * tf)
+
+    @property
+    def density(self) -> float:
+        m, k = self.shape
+        return self.nnz / float(max(m * k, 1))
+
+    @property
+    def geometry(self) -> Tuple[int, ...]:
+        """Bucketable executable geometry (what forces a recompile)."""
+        if self.format is Format.HFLEX:
+            d = self.data
+            return (*d.geometry, d.tm, d.k0, d.chunk, d.interleaved)
+        d = self.data
+        return (d.blocks.shape[0], d.k, d.f, d.tk, d.tf)
+
+    @property
+    def values(self) -> jax.Array:
+        """The differentiable non-zero payload (vals slab / BSR blocks)."""
+        return self.data.vals if self.format is Format.HFLEX else self.data.blocks
+
+    def with_values(self, v: jax.Array) -> "SparseTensor":
+        """Same sparsity structure, new non-zero values (pruned-layer update)."""
+        if self.format is Format.HFLEX:
+            return dataclasses.replace(
+                self, data=dataclasses.replace(self.data, vals=v))
+        return dataclasses.replace(
+            self, data=dataclasses.replace(self.data, blocks=v))
+
+    # -- compute ------------------------------------------------------------
+
+    def spmm(self, b, c=None, alpha=1.0, beta=0.0, *, backend: str = "auto",
+             **opts) -> jax.Array:
+        from .ops import spmm as _spmm
+
+        return _spmm(self, b, c, alpha, beta, backend=backend, **opts)
+
+    def __matmul__(self, b) -> jax.Array:
+        b = jnp.asarray(b)
+        if b.ndim == 1:
+            return self.spmm(b[:, None])[:, 0]
+        return self.spmm(b)
+
+    def todense(self) -> jax.Array:
+        """Materialize A as a dense (M, K) f32 array (oracle/debug path)."""
+        m, k = self.shape
+        if self.format is Format.HFLEX:
+            d = self.data
+            mb, nw, lw = d.vals.shape
+            bi = jnp.arange(mb, dtype=jnp.int32)[:, None, None]
+            wi = jnp.arange(nw, dtype=jnp.int32)[None, :, None]
+            if d.interleaved:
+                rows_g = d.rows * mb + bi          # undo block interleave
+            else:
+                rows_g = bi * d.tm + d.rows
+            cols_g = wi * d.k0 + d.cols
+            out = jnp.zeros((m, k), jnp.float32)
+            # padded slots carry val == 0 -> 'drop' only guards OOB pad rows
+            return out.at[rows_g.reshape(-1), cols_g.reshape(-1)].add(
+                d.vals.reshape(-1), mode="drop")
+        d = self.data  # stores A^T as a (K', M') weight
+        nbf = d.f // d.tf
+        bcol = jnp.searchsorted(
+            d.indptr, jnp.arange(d.blocks.shape[0]), side="right") - 1
+        at = jnp.zeros((d.k // d.tk, nbf, d.tk, d.tf), jnp.float32)
+        at = at.at[d.brow, bcol].add(d.blocks.astype(jnp.float32))
+        at = at.transpose(0, 2, 1, 3).reshape(d.k, d.f)    # A^T (K', M')
+        return at.T[:m, :k]
+
+
+# ---------------------------------------------------------------------------
+# Constructors
+# ---------------------------------------------------------------------------
+
+
+def from_sparse_matrix(
+    a: SparseMatrix,
+    format: Format = Format.HFLEX,
+    *,
+    tm: int = 128,
+    k0: int = 4096,
+    chunk: int = 8,
+    interleave: bool = True,
+    bucket: bool = True,
+    block: Tuple[int, int] = (128, 128),
+    threshold: float = 0.0,
+) -> SparseTensor:
+    """Pack a host COO :class:`SparseMatrix` into a device SparseTensor."""
+    if format is Format.HFLEX:
+        packed = pack_hflex(a, tm=tm, k0=k0, chunk=chunk,
+                            interleave=interleave, bucket=bucket)
+        return SparseTensor(data=packed, format=Format.HFLEX, shape=a.shape)
+    from repro.core.sparse import to_dense
+
+    return from_dense(to_dense(a), format=Format.BSR, block=block,
+                      threshold=threshold)
+
+
+def from_coo(
+    shape: Tuple[int, int],
+    row: np.ndarray,
+    col: np.ndarray,
+    val: np.ndarray,
+    format: Format = Format.HFLEX,
+    **kwargs,
+) -> SparseTensor:
+    """Build from raw COO triples (host arrays)."""
+    sm = SparseMatrix(
+        tuple(shape),
+        np.asarray(row, np.int32),
+        np.asarray(col, np.int32),
+        np.asarray(val, np.float32),
+    ).sorted_column_major()
+    return from_sparse_matrix(sm, format=format, **kwargs)
+
+
+def from_dense(
+    a: np.ndarray,
+    format: Format = Format.HFLEX,
+    *,
+    block: Tuple[int, int] = (128, 128),
+    threshold: float = 0.0,
+    **kwargs,
+) -> SparseTensor:
+    """Build from a dense (M, K) array; zeros (or, for BSR, all-zero tiles)
+    are dropped."""
+    a = np.asarray(a)
+    if a.ndim != 2:
+        raise ValueError("from_dense expects a 2-D matrix")
+    if format is Format.HFLEX:
+        return from_sparse_matrix(_coo_from_dense(a), format=format, **kwargs)
+    m, k = a.shape
+    bm, bk = block
+    mpad, kpad = cdiv(m, bm) * bm, cdiv(k, bk) * bk
+    at = np.zeros((kpad, mpad), np.float32)
+    at[:k, :m] = a.T.astype(np.float32)
+    w = pack_bsr_weight(at, tk=bk, tf=bm, threshold=threshold)
+    # stored cells inside the logical bounds (edge tiles are part-padding)
+    brow = np.asarray(w.brow)
+    bcol = np.searchsorted(np.asarray(w.indptr), np.arange(brow.shape[0]),
+                           side="right") - 1
+    nse = int((np.clip(k - brow * bk, 0, bk)
+               * np.clip(m - bcol * bm, 0, bm)).sum())
+    return SparseTensor(data=w, format=Format.BSR, shape=(m, k), nse=nse)
+
+
+def from_bsr_weight(w: BsrWeight) -> SparseTensor:
+    """Wrap an existing (K, F) BSR *weight* as the SparseTensor ``W^T`` of
+    shape (F, K), so that ``W^T @ x^T = (x @ W)^T`` — the natural bridge from
+    the legacy ``bsr_matmul(x, w)`` orientation to ``spmm(A, b)``."""
+    nb, tk, tf = w.blocks.shape
+    return SparseTensor(data=w, format=Format.BSR, shape=(w.f, w.k),
+                        nse=int(nb * tk * tf))

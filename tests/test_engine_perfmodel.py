@@ -39,6 +39,43 @@ class TestEngine:
         assert eng.stats.cache_misses == 1
         assert eng.stats.cache_hits == 5
 
+    def test_alpha_beta_sweep_single_executable(self, rng):
+        """alpha/beta are traced scalars read from SMEM: a 5-point epilogue
+        sweep is ONE executable (cache miss) and ZERO new backend traces
+        after the first — previously every (alpha, beta) pair recompiled."""
+        import repro.sparse_api as sp
+
+        eng = SextansEngine(tm=32, k0=64, chunk=8, impl="pallas", tn=8,
+                            bucket=True)
+        a = random_sparse(64, 64, 0.05, seed=7)
+        packed = eng.pack(a)
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        c = rng.standard_normal((64, 8)).astype(np.float32)
+        sweep = [(0.1, 0.9), (0.5, 0.5), (1.0, 0.0), (2.0, -1.0), (7.5, 0.25)]
+
+        out0 = eng.spmm(packed, jnp.asarray(b), jnp.asarray(c), *sweep[0])
+        traces_after_first = sp.BACKEND_STATS["traces"]
+        for alpha, beta in sweep[1:]:
+            out = eng.spmm(packed, jnp.asarray(b), jnp.asarray(c), alpha, beta)
+            ref = spmm_reference(a, b, c, alpha, beta)
+            np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4,
+                                       atol=2e-4 * np.abs(ref).max())
+        assert eng.stats.cache_misses == 1, eng.stats
+        assert eng.stats.cache_hits == len(sweep) - 1
+        # no re-trace => no re-compile: the jit cache key is unchanged
+        assert sp.BACKEND_STATS["traces"] == traces_after_first
+        del out0
+
+    def test_signature_excludes_epilogue_and_contents(self, rng):
+        """Executable identity = geometry + N + backend; not alpha/beta,
+        not matrix contents (HFlex)."""
+        eng = SextansEngine(tm=32, k0=64, chunk=8, impl="jnp", bucket=True)
+        a1 = random_sparse(100, 128, 0.05, seed=0)
+        a2 = random_sparse(100, 128, 0.05, seed=9)
+        s1 = eng.signature(eng.pack(a1), 8)
+        s2 = eng.signature(eng.pack(a2), 8)
+        assert s1 == s2
+
     def test_sharded_spmm_disjoint_rows(self, rng):
         """Row-sharded SpMM on a 4x2 mesh matches the reference — the
         paper's disjoint-PE property lifted to chips."""
