@@ -1,6 +1,8 @@
 """Benchmark harness — one entry per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows:
+Prints ``name,us_per_call,derived`` CSV rows (and, with ``--json PATH``,
+writes the same rows as machine-readable JSON so the BENCH_*.json perf
+trajectory can accumulate across PRs):
 
   table1_*   — speedup breakdown (paper Table 1): OoO / PUs / PEs
   fig7_*     — geomean speedups vs modeled GPUs (paper Fig. 7 headline)
@@ -8,20 +10,32 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig9_*     — memory bandwidth utilization geomean (paper Fig. 9)
   fig10_*    — energy efficiency geomean (paper Fig. 10)
   kernel_*   — Pallas/jnp SpMM microbenchmarks (wall-clock, CPU interpret)
+  plan_spmm  — SpmmPlan.run vs unplanned spmm (bit-identity asserted)
   sched_*    — scheduler preprocessing throughput + bubble fraction
+               (vectorized production scheduler vs exact-greedy reference)
+
+All wall-clock numbers use ``time.perf_counter`` (monotonic,
+high-resolution); JAX results are ``block_until_ready``-fenced.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--budget small|full]
+                                              [--json PATH]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from typing import List
 
 import numpy as np
 
+# Collected rows of the current invocation: {"name", "us", "derived"}.
+ROWS: List[dict] = []
+
 
 def _row(name: str, us: float, derived: str) -> None:
+    ROWS.append({"name": name, "us": us, "derived": derived})
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -30,9 +44,9 @@ def bench_table1() -> None:
     from repro.core.sparse import banded_sparse
 
     a = banded_sparse(3000, 3000, 12, seed=1)   # crystm03-like (scaled)
-    t0 = time.time()
+    t0 = time.perf_counter()
     t = table1_breakdown(a, n=8)
-    us = (time.time() - t0) * 1e6
+    us = (time.perf_counter() - t0) * 1e6
     _row("table1_incr_ooo", us, f"{t['incr_ooo']:.2f}x_paper_9.97x")
     _row("table1_incr_pus", us, f"{t['incr_pus']:.2f}x_paper_7.97x")
     _row("table1_incr_pes", us, f"{t['incr_pes']:.2f}x_paper_45.3x")
@@ -50,7 +64,7 @@ def bench_fig7(budget: str) -> None:
     entries = suite(budget)
     ratios_k80, ratios_v100 = [], []
     peak = {"SEXTANS": 0.0, "SEXTANS-P": 0.0}
-    t0 = time.time()
+    t0 = time.perf_counter()
     for e in entries:
         for n in paper_n_values(budget):
             cyc = event_cycles(e.matrix, n, pp)
@@ -67,7 +81,7 @@ def bench_fig7(budget: str) -> None:
                                   throughput_gflops(e.matrix, n, ts))
             peak["SEXTANS-P"] = max(peak["SEXTANS-P"],
                                     throughput_gflops(e.matrix, n, tsp))
-    us = (time.time() - t0) * 1e6 / max(len(ratios_k80), 1)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(ratios_k80), 1)
     geo_k = float(np.exp(np.mean(np.log(ratios_k80))))
     geo_v = float(np.exp(np.mean(np.log(ratios_v100))))
     _row("fig7_geomean_vs_k80", us, f"{geo_k:.2f}x_paper_2.50x")
@@ -87,7 +101,7 @@ def bench_fig9_fig10(budget: str) -> None:
     entries = suite(budget)
     utils = {"SEXTANS": [], "K80": []}
     eff = {"SEXTANS": [], "K80": []}
-    t0 = time.time()
+    t0 = time.perf_counter()
     count = 0
     for e in entries:
         for n in paper_n_values(budget):
@@ -102,7 +116,7 @@ def bench_fig9_fig10(budget: str) -> None:
             p = e.matrix.problem_size_flop(n)
             eff["SEXTANS"].append(p / ts / PLATFORMS["SEXTANS"].power_W)
             eff["K80"].append(p / tk / PLATFORMS["K80"].power_W)
-    us = (time.time() - t0) * 1e6 / max(count, 1)
+    us = (time.perf_counter() - t0) * 1e6 / max(count, 1)
     gu_s = float(np.exp(np.mean(np.log(utils["SEXTANS"]))))
     gu_k = float(np.exp(np.mean(np.log(utils["K80"]))))
     _row("fig9_bw_util_sextans", us, f"{gu_s:.4f}_paper_0.0385")
@@ -124,7 +138,7 @@ def bench_hub_split(budget: str) -> None:
     pp = SextansParams()
     entries = [e for e in suite(budget) if e.family == "power_law"]
     base, split = [], []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for e in entries:
         for n in paper_n_values(budget):
             tk = gpu_model_time(e.matrix, n, PLATFORMS["K80"])
@@ -135,10 +149,22 @@ def bench_hub_split(budget: str) -> None:
                                                     hub_split=4 * pp.D))
             base.append(tk / t_b)
             split.append(tk / t_s)
-    us = (time.time() - t0) * 1e6 / max(len(base), 1)
+    us = (time.perf_counter() - t0) * 1e6 / max(len(base), 1)
     gb = float(np.exp(np.mean(np.log(base))))
     gs = float(np.exp(np.mean(np.log(split))))
     _row("hubsplit_powerlaw_vs_k80", us, f"{gb:.2f}x->{gs:.2f}x_beyond_paper")
+
+
+def _time_call(fn, iters: int = 5) -> float:
+    """Best-of-``iters`` wall clock (timeit practice: the minimum is the
+    least noise-contaminated estimate). Warms once for compile/caches."""
+    fn()  # warm / compile
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def bench_kernels() -> None:
@@ -152,14 +178,35 @@ def bench_kernels() -> None:
     b = jnp.asarray(rng.standard_normal((512, 64)), jnp.float32)
     A = sp.from_sparse_matrix(a, tm=128, k0=128, chunk=8, bucket=False)
     for backend in ("pallas", "pallas_onehot", "jnp"):
-        sp.spmm(A, b, backend=backend).block_until_ready()  # warm
-        t0 = time.perf_counter()
-        iters = 5
-        for _ in range(iters):
-            sp.spmm(A, b, backend=backend).block_until_ready()
-        us = (time.perf_counter() - t0) * 1e6 / iters
+        us = _time_call(
+            lambda: sp.spmm(A, b, backend=backend).block_until_ready())
         gf = a.problem_size_flop(64) / (us / 1e6) / 1e9
         _row(f"kernel_spmm_{backend}", us, f"{gf:.3f}GFLOPs_cpu_interpret")
+
+
+def bench_plan() -> None:
+    """SpmmPlan.run vs unplanned spmm on the jnp (CPU production) backend.
+
+    Asserts bit-identity between the two paths before timing — the plan is
+    a dispatch/precompute optimization, never a numerics change."""
+    import jax.numpy as jnp
+
+    import repro.sparse_api as sp
+    from repro.core.sparse import power_law_sparse
+
+    rng = np.random.default_rng(0)
+    a = power_law_sparse(512, 512, 6, seed=1)
+    b = jnp.asarray(rng.standard_normal((512, 64)), jnp.float32)
+    A = sp.from_sparse_matrix(a, tm=128, k0=128, chunk=8, bucket=True)
+    plan = sp.plan(A, 64, backend="jnp")
+    y_plan = np.asarray(plan.run(b))
+    y_unpl = np.asarray(sp.spmm(A, b, backend="jnp"))
+    assert np.array_equal(y_plan, y_unpl), "plan.run diverged from spmm"
+    us_u = _time_call(
+        lambda: sp.spmm(A, b, backend="jnp").block_until_ready(), iters=20)
+    us_p = _time_call(lambda: plan.run(b).block_until_ready(), iters=20)
+    _row("plan_spmm_unplanned", us_u, "jnp_backend")
+    _row("plan_spmm", us_p, f"{us_u / us_p:.2f}x_vs_unplanned_bitexact")
 
 
 def bench_scheduler() -> None:
@@ -168,17 +215,27 @@ def bench_scheduler() -> None:
     from repro.core.sparse import power_law_sparse
 
     a = power_law_sparse(20_000, 20_000, 6, seed=2)
-    t0 = time.time()
-    ps = pack_pe_streams(a, SextansParams(K0=4096, P=64, D=10))
-    us = (time.time() - t0) * 1e6
-    nnz_per_s = a.nnz / (us / 1e6)
-    _row("sched_preprocess", us,
-         f"{nnz_per_s/1e6:.2f}Mnnz/s_bubbles_{ps.bubble_fraction:.3f}")
+    pp = SextansParams(K0=4096, P=64, D=10)
+
+    def one(mode: str, iters: int) -> None:
+        ps = pack_pe_streams(a, pp, mode=mode)
+        us = _time_call(lambda: pack_pe_streams(a, pp, mode=mode),
+                        iters=iters)
+        nnz_per_s = a.nnz / (us / 1e6)
+        name = "sched_preprocess" if mode == "vectorized" else \
+            f"sched_preprocess_{mode}"
+        _row(name, us,
+             f"{nnz_per_s/1e6:.2f}Mnnz/s_bubbles_{ps.bubble_fraction:.3f}")
+
+    one("vectorized", iters=10)    # the production preprocessing path
+    one("greedy", iters=2)         # exact-greedy reference (paper Fig. 5)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", choices=("small", "full"), default="small")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as machine-readable JSON")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
     bench_table1()
@@ -186,7 +243,17 @@ def main() -> None:
     bench_fig9_fig10(args.budget)
     bench_hub_split(args.budget)
     bench_kernels()
+    bench_plan()
     bench_scheduler()
+    if args.json:
+        payload = {
+            "schema": 1,
+            "budget": args.budget,
+            "rows": ROWS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {len(ROWS)} rows to {args.json}")
 
 
 if __name__ == "__main__":

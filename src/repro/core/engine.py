@@ -14,7 +14,13 @@ The engine restores the HFlex property by
    the compiled program does not;
 4. treating ``alpha``/``beta`` as *traced* scalars (the kernel reads them
    from SMEM): an epilogue sweep is **zero** additional executables — they
-   are no longer part of :meth:`signature`.
+   are no longer part of :meth:`signature`;
+5. executing through :class:`repro.sparse_api.SpmmPlan` (``use_plans=True``,
+   the default): per (matrix, N) pair the padding/permutation precompute,
+   backend resolution and executable lookup happen **once**; the serving
+   hot loop is a bare compiled call (results bit-identical to the unplanned
+   path).  Set ``use_plans=False`` to route through the differentiable
+   ``spmm`` entry point instead.
 
 The engine is a thin stats-and-sharding wrapper over the unified front-end
 :mod:`repro.sparse_api` (SparseTensor + backend registry); ``impl`` is a
@@ -72,15 +78,21 @@ class SextansEngine:
         impl: str = "pallas",
         interleave: bool = True,
         bucket: bool = True,
-        interpret: bool = True,
+        interpret: Optional[bool] = None,
+        use_plans: bool = True,
     ):
         self.tm, self.k0, self.chunk, self.tn = tm, k0, chunk, tn
         self.impl = impl
         self.interleave = interleave
         self.bucket = bucket
         self.interpret = interpret
+        self.use_plans = use_plans
         self.stats = EngineStats()
         self._seen_signatures: set = set()
+        # (id(packed), n, dtype) -> (packed, SpmmPlan); the entry holds the
+        # caller's object so its id stays live (and unique) while cached.
+        # Bounded at PLAN_CACHE_CAP (see plan_for).
+        self._plans: Dict[Tuple, Tuple] = {}
 
     # -- preprocessing ------------------------------------------------------
 
@@ -123,6 +135,37 @@ class SextansEngine:
         backend = resolve_backend(self.impl, t, b)
         return (*t.geometry, npad, backend)
 
+    #: plan_for keeps at most this many plans; oldest evicted first.
+    PLAN_CACHE_CAP = 256
+
+    def plan_for(self, packed, n: int, dtype=None) -> "SpmmPlan":
+        """The engine's :class:`SpmmPlan` for (matrix, N) — built on first
+        use, then a dictionary lookup.  Executables are shared across
+        bucket-mates through the module-level plan cache.
+
+        Keyed by ``id(packed)`` — the *caller-held* object, so legacy
+        ``PackedSpMM`` inputs (which get wrapped in a fresh SparseTensor per
+        call) still hit the cache.  The cached entry holds a reference to
+        ``packed``, keeping the id stable while the entry lives; the cache
+        is bounded (oldest-first eviction) so long-running serving loops do
+        not pin unbounded device memory."""
+        import jax.numpy as jnp
+
+        from repro.sparse_api import plan as _plan
+
+        dtype = jnp.dtype(dtype or jnp.float32)
+        key = (id(packed), int(n), str(dtype))
+        hit = self._plans.get(key)
+        if hit is not None:
+            return hit[1]
+        t = self._as_tensor(packed)
+        pl = _plan(t, n, backend=self.impl, dtype=dtype,
+                   tn=self.tn, interpret=self.interpret)
+        while len(self._plans) >= self.PLAN_CACHE_CAP:
+            self._plans.pop(next(iter(self._plans)))
+        self._plans[key] = (packed, pl)
+        return pl
+
     def spmm(
         self,
         packed,
@@ -141,6 +184,11 @@ class SextansEngine:
             self.stats.cache_misses += 1
             self._seen_signatures.add(sig)
         self.stats.calls += 1
+        if self.use_plans:
+            # Pass the *caller's* object: the plan cache keys on its id, so
+            # legacy PackedSpMM inputs hit the cache across calls.
+            pl = self.plan_for(packed, b.shape[1], b.dtype)
+            return pl.run(b, c, alpha, beta)
         return spmm(t, b, c, alpha, beta, backend=self.impl,
                     tn=self.tn, interpret=self.interpret)
 

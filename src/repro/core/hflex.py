@@ -100,16 +100,41 @@ def pack_pe_streams(
     params: Optional[SextansParams] = None,
     reorder_window: Optional[int] = None,
     hub_split: int = 0,
+    mode: str = "auto",
 ) -> PEStreams:
     """Partition (Eq. 3-4) -> schedule (Sec. 3.3) -> pack linearly with Q.
 
     ``hub_split > 0`` enables the beyond-paper virtual-sub-row transform
     (schedule.split_hub_rows) before scheduling: hub rows stop serializing
-    a PE; merged back in the CompC pass."""
-    from .schedule import split_hub_rows
+    a PE; merged back in the CompC pass.
 
+    ``mode`` selects the scheduler (see :mod:`repro.core.schedule`):
+    ``"vectorized"`` runs one cross-group NumPy pass over *all*
+    (window, PE) streams at once — the production preprocessing hot path
+    (the ``sched_preprocess`` benchmark); ``"greedy"`` is the paper-exact
+    per-element reference the performance model charges.  ``"auto"``
+    resolves to vectorized unless ``reorder_window`` is set (greedy-only).
+    """
     params = params or SextansParams()
     a.validate()
+    if mode not in ("auto", "vectorized", "greedy"):
+        raise ValueError(f"unknown scheduler mode {mode!r}")
+    if mode == "vectorized" and reorder_window is not None:
+        raise ValueError("reorder window is only supported by mode='greedy'")
+    if mode == "greedy" or reorder_window is not None:
+        return _pack_pe_streams_greedy(a, params, reorder_window, hub_split)
+    return _pack_pe_streams_vectorized(a, params, hub_split)
+
+
+def _pack_pe_streams_greedy(
+    a: SparseMatrix,
+    params: SextansParams,
+    reorder_window: Optional[int],
+    hub_split: int,
+) -> PEStreams:
+    """Reference packer: per-(window, PE) exact-greedy scheduling loop."""
+    from .schedule import split_hub_rows
+
     m, k = a.shape
     windows = partition_windows(a, params.K0)
     nw = len(windows)
@@ -123,7 +148,8 @@ def pack_pe_streams(
             wp = per_pe[p]
             sched_rows = (split_hub_rows(wp.row, hub_split)
                           if hub_split else wp.row)
-            sched = schedule_nonzeros(sched_rows, params.D, reorder_window)
+            sched = schedule_nonzeros(sched_rows, params.D, reorder_window,
+                                      mode="greedy")
             words = np.full(sched.cycles, PEStreams.BUBBLE_WORD, np.uint64)
             real = sched.slots != BUBBLE
             src = sched.slots[real]
@@ -144,6 +170,191 @@ def pack_pe_streams(
         total_cycles=max((len(s) for s in cat), default=0),
         bubble_fraction=(total_bubbles / total_slots) if total_slots else 0.0,
     )
+
+
+def _pack_pe_streams_vectorized(
+    a: SparseMatrix,
+    params: SextansParams,
+    hub_split: int,
+) -> PEStreams:
+    """One NumPy pass over every (window, PE) stream at once.
+
+    Uses the occurrence-level scheduler of :mod:`repro.core.schedule`
+    (``mode="vectorized"``) generalized across groups: elements are keyed by
+    (group, occurrence level, row count desc, row id), level offsets are a
+    segmented cumsum, and the final 64-bit words are scattered into one flat
+    buffer that is then split per PE.  No per-element (or per-window) Python
+    loop — this is the ``sched_preprocess`` serving hot path.
+    """
+    a = a.sorted_column_major()
+    m, k = a.shape
+    P, K0, D = params.P, params.K0, params.D
+    nw = cdiv(k, K0) if k else 0
+    n = a.nnz
+
+    if n == 0 or nw == 0:
+        q0 = np.zeros(nw + 1, np.int64)
+        return PEStreams(
+            params=params, shape=(m, k), nnz=0,
+            streams=[np.empty((0,), np.uint64) for _ in range(P)],
+            q=[q0.copy() for _ in range(P)],
+            total_cycles=0, bubble_fraction=0.0,
+        )
+
+    win, lc = _divmod_fast(a.col, K0)
+    lr, pe = _divmod_fast(a.row, P)
+
+    # Occurrence index / count within each (group, local-row) pair, in the
+    # column-major stream order, where group = one (window, PE) stream.
+    # The pipeline is memory-bound: per-element arrays stay int32 whenever
+    # the key range allows (the common case), and the one stable sort runs
+    # as a quicksort over a tie-broken unique int64 composite — NumPy's
+    # stable argsort is 4-5x slower.
+    stride = (m - 1) // P + 2 if m else 2
+    key_bound = nw * P * stride
+    # int32 everywhere requires the sort key, slot offsets (<= n*(D+1)) and
+    # element count to fit.
+    small = (key_bound < np.iinfo(np.int32).max
+             and (n + 1) * (D + 1) < np.iinfo(np.int32).max)
+    idt = np.int32 if small else np.int64
+    arange_n = np.arange(n, dtype=idt)
+    if small:
+        kk = (win * np.int32(P) + pe) * np.int32(stride) + lr
+    else:
+        kk = (win.astype(np.int64) * P + pe) * stride + lr
+    if key_bound < 2**62 // max(n, 1):
+        order1 = np.argsort(kk.astype(np.int64) * n + arange_n)
+    else:
+        order1 = np.argsort(kk, kind="stable")
+    kk_s = kk[order1]
+    new_run = np.empty(n, bool)
+    new_run[0] = True
+    new_run[1:] = kk_s[1:] != kk_s[:-1]
+    if hub_split > 0:
+        # Virtual sub-rows (schedule.split_hub_rows, fused): occurrence j of
+        # a (group, row) run becomes occurrence j % t of virtual sub-row
+        # j // t — sub-run boundaries are every t-th element of a run.
+        run_id0 = np.cumsum(new_run, dtype=idt) - idt(1)
+        start0 = np.nonzero(new_run)[0].astype(idt)
+        occ0 = arange_n - start0[run_id0]
+        new_run |= (occ0 % hub_split) == 0
+    run_id_s = np.cumsum(new_run, dtype=idt) - idt(1)     # run = scheduled row
+    run_start = np.nonzero(new_run)[0].astype(idt)
+    nruns = run_start.shape[0]
+    run_cnt = np.diff(np.append(run_start, idt(n)))
+    run_g = kk_s[run_start] // idt(stride)                # run -> group id
+
+    # Per-run rank within its group under (count desc, first-position asc):
+    # a surviving row keeps the same rank at every level it appears in, so
+    # same-row spacing == level length >= D (see schedule.py for the proof).
+    cmax_all = int(run_cnt.max())
+    if nw * P * (cmax_all + 1) < 2**62 // (n + 1):
+        order_r = np.argsort(
+            (run_g.astype(np.int64) * (cmax_all + 1)
+             + (cmax_all - run_cnt)) * (n + 1) + run_start)
+    else:
+        order_r = np.lexsort((run_start, -run_cnt, run_g))
+    new_grp = np.empty(nruns, bool)
+    new_grp[0] = True
+    new_grp[1:] = run_g[order_r][1:] != run_g[order_r][:-1]
+    grp_start_r = np.nonzero(new_grp)[0].astype(idt)
+    grp_of_rrun = np.cumsum(new_grp, dtype=idt) - idt(1)  # dense group rank
+    rank_sorted = np.arange(nruns, dtype=idt) - grp_start_r[grp_of_rrun]
+    run_rank = np.empty(nruns, idt)
+    run_rank[order_r] = rank_sorted
+    run_grp = np.empty(nruns, idt)                        # run -> dense group
+    run_grp[order_r] = grp_of_rrun
+    ngrp = int(grp_start_r.shape[0])
+    grp_g = run_g[order_r][grp_start_r]                   # dense grp -> g id
+    grp_cmax = run_cnt[order_r][grp_start_r]              # max count = #levels
+
+    # Level populations n_{g,k} = #runs in g with count > k, via a
+    # difference array over (group, level) slots (+1 extra slot per group so
+    # a full-length run's -1 stays inside its own group).
+    base = np.zeros(ngrp + 1, idt)
+    np.cumsum(grp_cmax + idt(1), out=base[1:])
+    nslots = int(base[-1])
+    run_base = base[run_grp]
+    diff = (np.bincount(run_base, minlength=nslots)
+            - np.bincount(run_base + run_cnt, minlength=nslots))
+    n_k = np.cumsum(diff, dtype=idt)                      # n_{g,k} at base[g]+k
+    lengths = np.maximum(n_k, idt(D))
+    last_lvl = base[1:] - 2                               # k = cmax_g - 1
+    lengths[last_lvl] = n_k[last_lvl]                     # last level: no pad
+    lengths[base[1:] - 1] = 0                             # the extra slot
+    cum = np.zeros(nslots + 1, idt)
+    np.cumsum(lengths, out=cum[1:])
+    level_off = cum[:-1] - cum[base][np.repeat(
+        np.arange(ngrp), grp_cmax + 1)]                   # offset within group
+    grp_cycles = (level_off[last_lvl]
+                  + n_k[last_lvl]).astype(np.int64)
+
+    # Per-(PE, window) cycle counts -> Q pointers -> flat stream buffer.
+    group_cycles = np.zeros(nw * P, np.int64)
+    group_cycles[grp_g] = grp_cycles
+    cyc = group_cycles.reshape(nw, P).T                   # (P, NW)
+    qmat = np.zeros((P, nw + 1), np.int64)
+    np.cumsum(cyc, axis=1, out=qmat[:, 1:])
+    pe_len = qmat[:, -1]
+    pe_base = np.zeros(P + 1, np.int64)
+    np.cumsum(pe_len, out=pe_base[1:])
+
+    # Element scatter position = flat-buffer base of its (PE, window) group
+    # + its within-group slot.  All per-run terms are folded into two small
+    # lookup tables so the per-element work is three gathers + two adds:
+    #   level index  = stream_rank + (level_base_of_run - run_start)
+    #   position     = level_off[level index] + (rank + group_base)_of_run
+    gpe = grp_g % idt(P)
+    group_pos = (pe_base[gpe]
+                 + qmat[gpe, grp_g // idt(P)]).astype(idt)  # per dense group
+    lvl_shift = run_base - run_start                      # per run
+    pos_base = run_rank + group_pos[run_grp]              # per run
+    pos = (level_off[arange_n + lvl_shift[run_id_s]]
+           + pos_base[run_id_s])
+
+    # 64-bit words, written as two 32-bit halves so the encode stays in
+    # int32 (half the temporary traffic of a uint64 build).  Bounds are
+    # checked once on the geometry (O(1)) instead of per-element
+    # reductions: every local row is < cdiv(m, P) and every local col < K0
+    # by construction of the partition.
+    if (m - 1) // P >= (1 << _ROW_BITS) or K0 > (1 << _COL_BITS):
+        raise ValueError("local row/col exceed the 64-bit element encoding")
+    val32 = np.ascontiguousarray(a.val, np.float32)
+    flat = np.full(int(pe_base[-1]), PEStreams.BUBBLE_WORD, np.uint64)
+    if np.little_endian and small:
+        # int32 shift/or wraps to the same bit pattern as uint32; the view
+        # reinterprets without a copy.  Indices may arrive as int64 (e.g.
+        # np.nonzero output) — coerce so the view stays one half per word
+        # ('small' already guarantees the values fit).
+        lr32 = np.ascontiguousarray(lr, np.int32)
+        lc32 = np.ascontiguousarray(lc, np.int32)
+        halves = flat.view(np.uint32).reshape(-1, 2)
+        src = order1
+        halves[pos, 0] = val32.view(np.uint32)[src]
+        halves[pos, 1] = ((lr32 << np.int32(_COL_BITS))
+                          | lc32).view(np.uint32)[src]
+    else:                                  # big-endian / huge-key fallback
+        flat[pos] = encode_a64(lr, lc, val32)[order1]
+
+    total_slots = int(cyc.sum())
+    return PEStreams(
+        params=params,
+        shape=(m, k),
+        nnz=n,
+        streams=list(np.split(flat, pe_base[1:-1])),
+        q=[qmat[p].copy() for p in range(P)],
+        total_cycles=int(pe_len.max()) if P else 0,
+        bubble_fraction=((total_slots - n) / total_slots) if total_slots else 0.0,
+    )
+
+
+def _divmod_fast(x: np.ndarray, b: int):
+    """(x // b, x % b) with shift/mask when b is a power of two (the default
+    accelerator geometry) — the packers' per-element divisions are hot."""
+    if b > 0 and (b & (b - 1)) == 0:
+        s = b.bit_length() - 1
+        return x >> s, x & (b - 1)
+    return np.divmod(x, b)
 
 
 def unpack_pe_streams(ps: PEStreams) -> SparseMatrix:

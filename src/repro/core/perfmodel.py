@@ -99,8 +99,11 @@ def event_cycles(
     params = params or SextansParams()
     m, k = a.shape
     if streams is None and not in_order:
+        # The cycle model charges the FPGA's actual scheduler: pin the exact
+        # greedy (the vectorized production scheduler trades a few bubbles
+        # for preprocessing speed and would skew Table-1 fidelity).
         streams = pack_pe_streams(a, params, reorder_window,
-                                  hub_split=hub_split)
+                                  hub_split=hub_split, mode="greedy")
 
     nwin = cdiv(k, params.K0)
     t_init = k / params.P

@@ -54,7 +54,19 @@ class SparseMatrix:
         m, k = self.shape
         return self.nnz / float(max(m * k, 1))
 
+    def is_column_major(self) -> bool:
+        """O(nnz) check that the triples are already (col, row)-sorted —
+        lets packers skip the lexsort on the (common) pre-sorted path."""
+        if self.nnz <= 1:
+            return True
+        dc = np.diff(self.col)
+        if np.any(dc < 0):
+            return False
+        return bool(np.all((dc > 0) | (np.diff(self.row) >= 0)))
+
     def sorted_column_major(self) -> "SparseMatrix":
+        if self.is_column_major():
+            return self
         order = np.lexsort((self.row, self.col))
         return SparseMatrix(self.shape, self.row[order], self.col[order], self.val[order])
 

@@ -2,7 +2,21 @@
 
 from __future__ import annotations
 
+from typing import Optional
+
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 # jax renamed TPUCompilerParams -> CompilerParams around 0.5; support both.
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Platform-aware default for the Pallas ``interpret`` flag.
+
+    ``None`` means "interpret only off-TPU": on a real TPU the kernels
+    compile through Mosaic; everywhere else (CPU CI, local dev) they run in
+    the interpreter.  Explicit ``True``/``False`` is honored as-is."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -18,6 +18,8 @@ sparsity pattern of the same bucketed geometry (HFlex).
 
 from __future__ import annotations
 
+from typing import Optional
+
 import functools
 
 import jax
@@ -26,6 +28,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams as _CompilerParams
+from ._compat import resolve_interpret as _resolve_interpret
 
 __all__ = ["bsr_matmul_pallas"]
 
@@ -69,10 +72,11 @@ def bsr_matmul_pallas(
     tb: int = 128,
     tk: int = 128,
     tf: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """y = x @ W for block-sparse W. x padded to (B % tb == 0, K % tk == 0);
-    output (B, NF*tf)."""
+    output (B, NF*tf). ``interpret=None`` interprets only off-TPU."""
+    interpret = _resolve_interpret(interpret)
     bsz, k = x.shape
     nb = blocks.shape[0]
     nf = indptr.shape[0] - 1

@@ -64,7 +64,7 @@ def sextans_spmm(
     beta: float = 0.0,
     impl: str = "pallas",
     tn: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Deprecated: use repro.sparse_api.spmm.  ``impl`` maps to a registered
     backend name; alpha/beta are now traced (no recompile per value)."""
@@ -91,7 +91,7 @@ def bsr_matmul(
     *,
     impl: str = "pallas",
     tb: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Deprecated: y = x @ W for block-sparse W; x: (..., K) -> (..., F).
     Routes through spmm on the transposed view (W^T @ x^T)^T."""

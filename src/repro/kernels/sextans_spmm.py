@@ -35,7 +35,7 @@ with (i ↔ NT, j ↔ NW, p·q ↔ intra-kernel parallelism).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,6 +43,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from ._compat import CompilerParams as _CompilerParams
+from ._compat import resolve_interpret as _resolve_interpret
 
 __all__ = ["sextans_spmm_pallas"]
 
@@ -72,37 +73,44 @@ def _kernel(
 
     m = pl.program_id(0)
     count = q_ref[m, w]                       # real (chunk-ceiled) nnz here
-    nchunks = count // chunk
 
-    bwin = b_ref[...].astype(jnp.float32)     # (K0, TN) window, VMEM-resident
+    # Empty-slab skip: a (block, window) pair with zero non-zeros (sparsity
+    # structure, known from the prefetched pointer matrix q) contributes
+    # nothing — skip the VMEM read of the B window and the accumulate
+    # entirely.  The grid still visits the step (the window stream is the
+    # ``arbitrary`` innermost dimension) but executes no vector work.
+    @pl.when(count > 0)
+    def _process_window():
+        nchunks = count // chunk
+        bwin = b_ref[...].astype(jnp.float32)  # (K0, TN) window, VMEM-resident
+        # Loop-invariant one-hot iotas, hoisted out of the chunk loop.
+        row_iota = jax.lax.broadcasted_iota(jnp.int32, (tm, chunk), 0)
+        col_iota = (jax.lax.broadcasted_iota(jnp.int32, (chunk, k0), 1)
+                    if gather == "onehot" else None)
 
-    def body(ci, acc):
-        sl = pl.ds(ci * chunk, chunk)
-        v = vals_ref[0, 0, sl].astype(jnp.float32)        # (CH,)
-        c = cols_ref[0, 0, sl]                            # (CH,)
-        r = rows_ref[0, 0, sl]                            # (CH,)
-        if gather == "onehot":
-            # (CH, K0) one-hot of column ids  @  (K0, TN) window
-            oh_c = (
-                jax.lax.broadcasted_iota(jnp.int32, (chunk, k0), 1) == c[:, None]
-            ).astype(jnp.float32)
-            brows = jax.lax.dot_general(
-                oh_c, bwin, (((1,), (0,)), ((), ())),
+        def body(ci, acc):
+            sl = pl.ds(ci * chunk, chunk)
+            v = vals_ref[0, 0, sl].astype(jnp.float32)        # (CH,)
+            c = cols_ref[0, 0, sl]                            # (CH,)
+            r = rows_ref[0, 0, sl]                            # (CH,)
+            if gather == "onehot":
+                # (CH, K0) one-hot of column ids  @  (K0, TN) window
+                oh_c = (col_iota == c[:, None]).astype(jnp.float32)
+                brows = jax.lax.dot_general(
+                    oh_c, bwin, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+            else:
+                brows = bwin[c, :]                            # (CH, TN) row gather
+            contrib = v[:, None] * brows                      # (CH, TN)
+            # scatter-by-row as one-hot matmul: (TM, CH) @ (CH, TN)
+            oh_r = (row_iota == r[None, :]).astype(jnp.float32)
+            return acc + jax.lax.dot_general(
+                oh_r, contrib, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32,
             )
-        else:
-            brows = bwin[c, :]                            # (CH, TN) row gather
-        contrib = v[:, None] * brows                      # (CH, TN)
-        # scatter-by-row as one-hot matmul: (TM, CH) @ (CH, TN)
-        oh_r = (
-            jax.lax.broadcasted_iota(jnp.int32, (tm, chunk), 0) == r[None, :]
-        ).astype(jnp.float32)
-        return acc + jax.lax.dot_general(
-            oh_r, contrib, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32,
-        )
 
-    acc_ref[...] = jax.lax.fori_loop(0, nchunks, body, acc_ref[...])
+        acc_ref[...] = jax.lax.fori_loop(0, nchunks, body, acc_ref[...])
 
     @pl.when(w == nw - 1)
     def _epilogue():
@@ -132,14 +140,17 @@ def sextans_spmm_pallas(
     chunk: int,
     tn: int = 128,
     gather: str = "gather",
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Raw kernel entry on pre-padded operands. Use repro.sparse_api.spmm for
     the user-facing API (handles packing, padding, permutation, autodiff).
 
     ``alpha``/``beta`` are *dynamic* operands (delivered to the kernel as a
     (1, 2) SMEM block): sweeping them re-uses one compiled executable.
+    ``interpret=None`` (the default) interprets only off-TPU — on a TPU the
+    kernel compiles through Mosaic without the caller opting in.
     """
+    interpret = _resolve_interpret(interpret)
     mb, nw, lw = vals.shape
     kpad, npad = b.shape
     assert kpad == nw * k0, (kpad, nw, k0)

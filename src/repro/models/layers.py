@@ -627,6 +627,7 @@ class SparseLinear:
 
     def __init__(self, skeleton):
         self.skeleton = skeleton                 # SparseTensor (d_out, d_in)
+        self._plans: Dict[Any, Any] = {}         # (B, backend, okey) -> SpmmPlan
 
     @property
     def d_in(self) -> int:
@@ -665,12 +666,33 @@ class SparseLinear:
         skeleton = from_dense(w.T, format=Format.BSR, block=(bo, bi))
         return cls(skeleton), {"w": skeleton.values}
 
+    def plan_for(self, batch: int, *, backend: str = "auto", **opts):
+        """Serving path: an :class:`~repro.sparse_api.SpmmPlan` for a fixed
+        flattened batch size, cached on the layer.  ``__call__`` with
+        ``use_plan=True`` routes through it, substituting the current weight
+        values per call (no repack, no retrace)."""
+        from repro.sparse_api import plan as _plan
+
+        key = (int(batch), backend, tuple(sorted(opts.items())))
+        pl = self._plans.get(key)
+        if pl is None:
+            pl = _plan(self.skeleton, int(batch), backend=backend, **opts)
+            self._plans[key] = pl
+        return pl
+
     def __call__(self, params: Dict[str, Any], x: jax.Array, *,
-                 backend: str = "auto", **opts) -> jax.Array:
+                 backend: str = "auto", use_plan: bool = False,
+                 **opts) -> jax.Array:
         from repro.sparse_api import spmm
 
-        a = self.skeleton.with_values(params["w"])
         lead = x.shape[:-1]
         xb = x.reshape(-1, self.d_in)
-        y = spmm(a, xb.T, backend=backend, **opts).T      # (B, d_out)
+        if use_plan:
+            # Inference-only fast path (plans are AOT executables, not
+            # differentiable): pass the live weights as the values operand.
+            pl = self.plan_for(xb.shape[0], backend=backend, **opts)
+            y = pl.run(xb.T, values=params["w"]).T        # (B, d_out)
+        else:
+            a = self.skeleton.with_values(params["w"])
+            y = spmm(a, xb.T, backend=backend, **opts).T  # (B, d_out)
         return y.reshape(*lead, self.d_out)

@@ -11,6 +11,11 @@ One differentiable, format-agnostic SpMM:
 Formats (``Format.HFLEX`` slabs, ``Format.BSR`` tiles) and execution
 backends (``pallas``, ``pallas_onehot``, ``jnp``, ``auto``) are orthogonal;
 new ones plug in through :func:`register_backend`.
+
+Serving hot loops should prepare a :func:`plan` (an :class:`SpmmPlan`):
+backend resolution, index precompute and executable compilation happen
+once, ``plan.run(b, c, alpha, beta)`` is a bare compiled call with results
+bit-identical to ``spmm``.
 """
 
 from .backends import (
@@ -23,6 +28,7 @@ from .backends import (
     set_auto_policy,
 )
 from .ops import spmm, spmm_raw
+from .plan import PLAN_STATS, SpmmPlan, clear_plan_cache, plan
 from .tensor import (
     BsrWeight,
     Format,
@@ -43,6 +49,10 @@ __all__ = [
     "BsrWeight",
     "spmm",
     "spmm_raw",
+    "plan",
+    "SpmmPlan",
+    "PLAN_STATS",
+    "clear_plan_cache",
     "from_coo",
     "from_dense",
     "from_sparse_matrix",

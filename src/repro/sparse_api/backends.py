@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from repro.core.partition import cdiv
 from repro.kernels.bsr_spmm import bsr_matmul_pallas
-from repro.kernels.ref import bsr_matmul_ref, spmm_slabs_ref
+from repro.kernels.ref import bsr_matmul_ref
 from repro.kernels.sextans_spmm import sextans_spmm_pallas
 
 from .tensor import Format, SparseTensor
@@ -162,19 +162,53 @@ def _permute_rows_inv(x: jax.Array, mb: int, tm: int) -> jax.Array:
     return x.reshape(mb, tm, n).transpose(1, 0, 2).reshape(tm * mb, n)
 
 
+def _hflex_global_ids(d, xp=jnp):
+    """Flat global (row, col) index arrays of every slab slot.
+
+    Padding slots (val == 0) resolve to legal in-bounds coordinates: their
+    local col is 0 so the global col is ``wi * k0 < k`` (ceil-div), and
+    their local row 0 maps below ``m`` in both block layouts — so the flat
+    path needs **no operand padding and no row permutation at all**.
+
+    The single source of truth for the slab->global layout math: the
+    unplanned ``jnp`` backend derives the ids in-trace (``xp=jnp``, integer
+    iota math), and :func:`repro.sparse_api.plan` precomputes them once on
+    the host (``xp=numpy``) — same expressions, so planned and unplanned
+    indices can never drift apart.
+    """
+    mb, nw, _ = d.vals.shape
+    rows = xp.asarray(d.rows)
+    cols = xp.asarray(d.cols)
+    bi = xp.arange(mb, dtype=xp.int32)[:, None, None]
+    wi = xp.arange(nw, dtype=xp.int32)[None, :, None]
+    if d.interleaved:
+        rows_g = rows * mb + bi            # undo block interleave
+    else:
+        rows_g = bi * d.tm + rows
+    cols_g = cols + wi * d.k0
+    return rows_g.reshape(-1), cols_g.reshape(-1)
+
+
+def _hflex_flat_exec(vals, cols_g, rows_g, b, c, alpha, beta, m):
+    """The shared flat segment-sum SpMM body.
+
+    Both the unplanned ``jnp`` backend and :class:`SpmmPlan.run` execute this
+    exact op sequence (one gather, one ``jax.ops.segment_sum``, fused
+    epilogue), so planned and unplanned results are bit-identical; the plan
+    merely feeds precomputed index operands and a cached executable.
+    """
+    contrib = vals[:, None].astype(jnp.float32) * b[cols_g].astype(jnp.float32)
+    acc = jax.ops.segment_sum(contrib, rows_g, num_segments=m)
+    return (alpha * acc + beta * c.astype(jnp.float32)).astype(b.dtype)
+
+
 def _hflex_jnp(a: SparseTensor, b, c, alpha, beta):
-    """XLA segment-sum path on the slab format (no padding of N)."""
+    """XLA segment-sum path on the slab format — no N/K/M padding, no row
+    permutation: slab slots scatter straight to true output rows."""
     d = a.data
-    m, k, tm, k0, mb, nw = d.m, d.k, d.tm, d.k0, d.mb, d.nw
-    cin = jnp.pad(c, ((0, mb * tm - m), (0, 0)))
-    if d.interleaved:
-        cin = _permute_rows_fwd(cin, mb, tm)
-    bp = jnp.pad(b, ((0, nw * k0 - k), (0, 0)))
-    out = spmm_slabs_ref(d.vals, d.cols, d.rows, d.q, bp, cin,
-                         k0, tm, alpha, beta)
-    if d.interleaved:
-        out = _permute_rows_inv(out, mb, tm)
-    return out[:m]
+    rows_g, cols_g = _hflex_global_ids(d)
+    return _hflex_flat_exec(d.vals.reshape(-1), cols_g, rows_g,
+                            b, c, alpha, beta, d.m)
 
 
 def _hflex_pallas(a: SparseTensor, b, c, alpha, beta, *, gather, tn, interpret):
@@ -234,7 +268,7 @@ def _backend_jnp(a, b, c, alpha, beta, **_unused):
 
 
 def _backend_pallas(a, b, c, alpha, beta, *, gather="gather", tn=128,
-                    interpret=True, **_unused):
+                    interpret=None, **_unused):
     BACKEND_STATS["traces"] += 1
     if a.format is Format.HFLEX:
         return _hflex_pallas(a, b, c, alpha, beta, gather=gather, tn=tn,
@@ -242,7 +276,7 @@ def _backend_pallas(a, b, c, alpha, beta, *, gather="gather", tn=128,
     return _bsr_pallas(a, b, c, alpha, beta, tn=tn, interpret=interpret)
 
 
-def _backend_pallas_onehot(a, b, c, alpha, beta, *, tn=128, interpret=True,
+def _backend_pallas_onehot(a, b, c, alpha, beta, *, tn=128, interpret=None,
                            **_unused):
     BACKEND_STATS["traces"] += 1
     return _hflex_pallas(a, b, c, alpha, beta, gather="onehot", tn=tn,

@@ -1,0 +1,227 @@
+"""SpmmPlan — prepare an SpMM once, run it many times.
+
+The unplanned :func:`repro.sparse_api.spmm` entry point is general (any
+backend, differentiable, traced epilogue) but pays per call: backend
+resolution, option-key construction, pytree hashing through the jit cache,
+and — in the traced body — the derivation of gather/scatter indices.  A
+*plan* hoists all of that to preparation time, the API analogue of the
+paper's preprocessing stage:
+
+    >>> import repro.sparse_api as sp
+    >>> P = sp.plan(A, n=64)                  # pad/permute/resolve ONCE
+    >>> y = P.run(b)                          # hot loop: compiled call only
+    >>> y = P.run(b, c, alpha=2.0, beta=0.5)  # traced epilogue, no recompile
+
+What a plan does once:
+
+* resolves the backend (``auto`` included) and freezes the option key;
+* precomputes the flat global gather/scatter index operands (HFLEX ``jnp``
+  path) or the payload operand list (Pallas / BSR paths);
+* AOT-lowers and compiles the executable, cached in a module-level table
+  keyed by the **bucketed geometry** (plus logical shape, N, dtypes and
+  backend): distinct matrices packed into the same bucket share one
+  executable and one trace — ``BACKEND_STATS["traces"]`` stays flat.
+
+``run`` results are bit-identical to the unplanned ``spmm`` (they execute
+the same op sequence; see ``backends._hflex_flat_exec``), and ``alpha`` /
+``beta`` remain *runtime* operands (HFlex: one executable serves any
+epilogue).  ``run(values=...)`` substitutes a new non-zero payload of the
+same structure (pruned-weight serving: update weights without re-planning).
+
+Plans are a forward/serving construct: ``run`` calls an AOT-compiled
+executable and is not differentiable — training goes through ``spmm``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hflex import bucket_geometry
+
+from . import backends as _bk
+from .tensor import Format, SparseTensor
+
+__all__ = ["SpmmPlan", "plan", "clear_plan_cache", "PLAN_STATS"]
+
+# Executable-cache hits/misses (the paper counts avoided place/route runs;
+# we count avoided traces+compiles).
+PLAN_STATS: Dict[str, int] = {"exec_hits": 0, "exec_misses": 0}
+
+_EXEC_CACHE: Dict[Tuple, Any] = {}
+
+
+def clear_plan_cache() -> None:
+    """Drop all cached plan executables (tests / memory pressure)."""
+    _EXEC_CACHE.clear()
+
+
+def _aot_compile(key: Tuple, fn, arg_shapes):
+    """Lower + compile ``fn`` for ``arg_shapes`` once per cache key."""
+    hit = _EXEC_CACHE.get(key)
+    if hit is not None:
+        PLAN_STATS["exec_hits"] += 1
+        return hit
+    PLAN_STATS["exec_misses"] += 1
+    compiled = jax.jit(fn).lower(*arg_shapes).compile()
+    _EXEC_CACHE[key] = compiled
+    return compiled
+
+
+class SpmmPlan:
+    """A prepared ``C = alpha * A @ B + beta * C`` for one (A, N) pair.
+
+    Build via :func:`plan`.  Attributes of note:
+
+    * ``backend`` — the resolved backend name (never ``"auto"``).
+    * ``exec_key`` — the executable-cache key (bucketed geometry + logical
+      shape + N + dtypes + backend/options).
+    """
+
+    def __init__(self, a: SparseTensor, n: int, backend: str,
+                 opts: Dict[str, Any], dtype=jnp.float32):
+        if not isinstance(a, SparseTensor):
+            raise TypeError(f"plan expects a SparseTensor, got {type(a).__name__}")
+        if n <= 0:
+            raise ValueError("n must be positive")
+        self.a = a
+        self.n = int(n)
+        self.m, self.k = a.shape
+        self.backend = _bk.resolve_backend(backend, a)
+        self.opts = dict(opts)
+        self.dtype = jnp.dtype(dtype)
+        okey = tuple(sorted(self.opts.items()))
+
+        m, k, n = self.m, self.k, self.n
+        flat = (a.format is Format.HFLEX and self.backend == "jnp")
+        self._flat = flat
+        if a.format is Format.HFLEX:
+            d = a.data
+            bucket = bucket_geometry(d.mb, d.nw, d.lw, n)
+        else:
+            d = a.data
+            bucket = (d.blocks.shape[0], d.k, d.f, d.tk, d.tf)
+        self.exec_key = ("flat" if flat else "payload", self.backend, okey,
+                         a.format, a.geometry, bucket, (m, k, n),
+                         str(self.dtype))
+
+        if flat:
+            # Host-precomputed flat gather/scatter indices (same layout
+            # helper as the unplanned backend, evaluated in numpy): the
+            # traced body is exactly backends._hflex_flat_exec — one gather,
+            # one segment_sum, fused epilogue.  No pad, no permute, no iota.
+            rows_g, cols_g = _bk._hflex_global_ids(d, xp=np)
+            self._operands = (
+                jnp.asarray(d.vals).reshape(-1),
+                jnp.asarray(cols_g),
+                jnp.asarray(rows_g),
+            )
+            self._values_slot = 0
+
+            def traced(vals, cols_gg, rows_gg, b, c, alpha, beta):
+                _bk.BACKEND_STATS["traces"] += 1
+                return _bk._hflex_flat_exec(vals, cols_gg, rows_gg, b, c,
+                                            alpha, beta, m)
+
+            self._traced = traced
+        else:
+            # Generic payload plan: pass every device leaf of the packed
+            # format as an operand (so bucket-mates share the executable)
+            # and rebuild the tensor inside the trace.
+            leaves, treedef = jax.tree_util.tree_flatten(a)
+            self._operands = tuple(leaves)
+            self._treedef = treedef
+            vals_leaf = a.values
+            self._values_slot = next(
+                i for i, leaf in enumerate(leaves) if leaf is vals_leaf)
+            backend_fn = _bk.get_backend(self.backend).fn
+            opts_d = self.opts
+
+            def traced(*args):
+                *lvs, b, c, alpha, beta = args
+                a_t = jax.tree_util.tree_unflatten(treedef, lvs)
+                return backend_fn(a_t, b, c, alpha, beta, **opts_d)
+
+            self._traced = traced
+
+        b_s = jax.ShapeDtypeStruct((k, n), self.dtype)
+        c_s = jax.ShapeDtypeStruct((m, n), self.dtype)
+        s_s = jax.ShapeDtypeStruct((), jnp.float32)
+        arg_shapes = tuple(
+            jax.ShapeDtypeStruct(x.shape, x.dtype) for x in self._operands
+        ) + (b_s, c_s, s_s, s_s)
+        self._compiled = _aot_compile(self.exec_key, self._traced, arg_shapes)
+        self._zero_c: Optional[jax.Array] = None
+        # Epilogue scalars are runtime operands; cache their device buffers
+        # per value so the hot loop never re-commits host scalars.
+        self._ab_cache: Dict[Tuple[float, float], Tuple[Any, Any]] = {}
+
+    # -- execution ----------------------------------------------------------
+
+    def run(self, b, c=None, alpha=1.0, beta=0.0, *, values=None) -> jax.Array:
+        """Execute the planned SpMM.
+
+        ``b`` must be ``(K, N)`` of the planned dtype; ``c`` defaults to a
+        cached zeros block.  ``alpha``/``beta`` are runtime operands (no
+        recompile).  ``values`` substitutes a new non-zero payload with the
+        packed structure of ``A`` (same shape as ``A.values``).
+        """
+        b = jnp.asarray(b)
+        if b.shape != (self.k, self.n) or b.dtype != self.dtype:
+            raise ValueError(
+                f"plan expects b of shape {(self.k, self.n)} dtype "
+                f"{self.dtype}, got {b.shape} {b.dtype}")
+        if c is None:
+            if self._zero_c is None:
+                self._zero_c = jnp.zeros((self.m, self.n), self.dtype)
+            c = self._zero_c
+        else:
+            c = jnp.asarray(c)
+        try:
+            ab_key = (float(alpha), float(beta))
+            cached = self._ab_cache.get(ab_key)
+            if cached is None:
+                cached = (jnp.asarray(alpha, jnp.float32),
+                          jnp.asarray(beta, jnp.float32))
+                if len(self._ab_cache) < 256:
+                    self._ab_cache[ab_key] = cached
+            alpha, beta = cached
+        except TypeError:       # traced / non-scalar: convert directly
+            alpha = jnp.asarray(alpha, jnp.float32)
+            beta = jnp.asarray(beta, jnp.float32)
+        ops = self._operands
+        if values is not None:
+            values = jnp.asarray(values)
+            if self._flat:                     # flat path stores vals 1-D
+                values = values.reshape(-1)
+            ops = (ops[:self._values_slot] + (values,)
+                   + ops[self._values_slot + 1:])
+        return self._compiled(*ops, b, c, alpha, beta)
+
+    def __call__(self, b, c=None, alpha=1.0, beta=0.0, **kw) -> jax.Array:
+        return self.run(b, c, alpha, beta, **kw)
+
+    def __repr__(self) -> str:
+        return (f"SpmmPlan(shape=({self.m}, {self.k})@{self.n}, "
+                f"backend={self.backend!r}, format={self.a.format.value})")
+
+
+def plan(
+    a: SparseTensor,
+    n: int,
+    *,
+    backend: str = "auto",
+    dtype=jnp.float32,
+    **opts,
+) -> SpmmPlan:
+    """Prepare ``alpha * A @ b + beta * c`` for dense operands of width ``n``.
+
+    Performs padding/permutation precompute, backend resolution and
+    executable compilation **once**; :meth:`SpmmPlan.run` then only invokes
+    the cached executable.  Executables are shared across matrices whose
+    bucketed geometry, logical shape and dtypes coincide.
+    """
+    return SpmmPlan(a, n, backend, opts, dtype=dtype)

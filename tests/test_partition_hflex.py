@@ -153,3 +153,87 @@ class TestBlockSlabs:
         no = pack_block_slabs(a, tm=128, k0=512, chunk=8, interleave=False)
         yes = pack_block_slabs(a, tm=128, k0=512, chunk=8, interleave=True)
         assert yes.padding_fraction <= no.padding_fraction
+
+
+class TestPackerModes:
+    """Vectorized cross-group packer vs the exact-greedy reference."""
+
+    PARAMS = SextansParams(K0=128, P=8, D=10)
+
+    @pytest.mark.parametrize("gen,args", [
+        (random_sparse, (120, 300, 0.03)),
+        (power_law_sparse, (200, 200, 4)),
+        (banded_sparse, (150, 150, 3)),
+    ])
+    @pytest.mark.parametrize("hub_split", [0, 16])
+    def test_contents_match_greedy(self, gen, args, hub_split):
+        """Both packers carry the same non-zeros (streams differ only in
+        slot placement/bubbles)."""
+        a = gen(*args, seed=5)
+        pg = pack_pe_streams(a, self.PARAMS, hub_split=hub_split,
+                             mode="greedy")
+        pv = pack_pe_streams(a, self.PARAMS, hub_split=hub_split,
+                             mode="vectorized")
+        bg, bv = unpack_pe_streams(pg), unpack_pe_streams(pv)
+        assert np.array_equal(bg.row, bv.row)
+        assert np.array_equal(bg.col, bv.col)
+        assert np.allclose(bg.val, bv.val)
+
+    def test_vectorized_cycles_within_bound(self):
+        """Per-stream cycle totals stay within the level scheduler's fixed
+        factor of the greedy (see schedule.VECTORIZED_CYCLE_BOUND)."""
+        from repro.core.schedule import VECTORIZED_CYCLE_BOUND
+
+        a = power_law_sparse(1500, 1500, 6, seed=1)
+        pg = pack_pe_streams(a, self.PARAMS, mode="greedy")
+        pv = pack_pe_streams(a, self.PARAMS, mode="vectorized")
+        slots_g = sum(len(st) for st in pg.streams)
+        slots_v = sum(len(st) for st in pv.streams)
+        assert slots_v <= VECTORIZED_CYCLE_BOUND * slots_g
+        assert pv.nnz == pg.nnz == a.nnz
+
+    def test_vectorized_streams_are_legal(self):
+        """Every (window, PE) stream of the vectorized packer satisfies the
+        II=1 same-row D-spacing (the sched_preprocess acceptance check)."""
+        a = power_law_sparse(400, 400, 6, seed=3)
+        params = SextansParams(K0=64, P=4, D=8)
+        ps = pack_pe_streams(a, params, mode="vectorized")
+        from repro.core.hflex import PEStreams
+        for p in range(params.P):
+            q = ps.q[p]
+            for j in range(len(q) - 1):
+                words = ps.streams[p][q[j]:q[j + 1]]
+                real = words != PEStreams.BUBBLE_WORD
+                if not real.any():
+                    continue
+                cycs = np.nonzero(real)[0]
+                r, _, _ = decode_a64(words[real])
+                order = np.lexsort((cycs, r))
+                rs, cs = r[order], cycs[order]
+                bad = (rs[1:] == rs[:-1]) & (np.diff(cs) < params.D)
+                assert not bad.any()
+
+    def test_window_is_greedy_only(self):
+        a = random_sparse(50, 50, 0.1, seed=0)
+        with pytest.raises(ValueError):
+            pack_pe_streams(a, self.PARAMS, reorder_window=8,
+                            mode="vectorized")
+        # auto silently resolves a window request to the greedy
+        ps = pack_pe_streams(a, self.PARAMS, reorder_window=8)
+        assert unpack_pe_streams(ps).nnz == a.nnz
+
+    def test_int64_coo_indices(self):
+        """np.nonzero yields int64 triples; the split-word fast path must
+        coerce, not reinterpret (regression: silent stream corruption)."""
+        rng = np.random.default_rng(0)
+        dense = ((rng.random((100, 100)) < 0.05)
+                 * rng.standard_normal((100, 100)))
+        r, c = np.nonzero(dense)                  # int64 indices
+        a = SparseMatrix((100, 100), r, c,
+                         dense[r, c].astype(np.float32)).sorted_column_major()
+        pp = SextansParams(K0=32, P=8, D=10)
+        bg = unpack_pe_streams(pack_pe_streams(a, pp, mode="greedy"))
+        bv = unpack_pe_streams(pack_pe_streams(a, pp, mode="vectorized"))
+        assert np.array_equal(bg.row, bv.row)
+        assert np.array_equal(bg.col, bv.col)
+        assert np.allclose(bg.val, bv.val)
