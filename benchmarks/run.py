@@ -13,12 +13,16 @@ trajectory can accumulate across PRs):
   plan_spmm  — SpmmPlan.run vs unplanned spmm (bit-identity asserted)
   sched_*    — scheduler preprocessing throughput + bubble fraction
                (vectorized production scheduler vs exact-greedy reference)
+  serve_*    — batched (geometry-bucketing scheduler) vs sequential
+               serving on a mixed pool of bucket-mates (bit-identity
+               asserted; requests/s and dispatches/request)
 
 All wall-clock numbers use ``time.perf_counter`` (monotonic,
 high-resolution); JAX results are ``block_until_ready``-fenced.
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--budget small|full]
                                               [--json PATH]
+                                              [--only SUBSTR]
 """
 
 from __future__ import annotations
@@ -26,16 +30,22 @@ from __future__ import annotations
 import argparse
 import json
 import time
-from typing import List
+from typing import List, Optional
 
 import numpy as np
 
-# Collected rows of the current invocation: {"name", "us", "derived"}.
+# Collected rows of the current invocation:
+# {"name", "us", "derived"[, "extra"]} — "extra" carries structured
+# key/value metrics for machine consumers (the CI serve-smoke assert).
 ROWS: List[dict] = []
 
 
-def _row(name: str, us: float, derived: str) -> None:
-    ROWS.append({"name": name, "us": us, "derived": derived})
+def _row(name: str, us: float, derived: str,
+         extra: Optional[dict] = None) -> None:
+    row = {"name": name, "us": us, "derived": derived}
+    if extra is not None:
+        row["extra"] = extra
+    ROWS.append(row)
     print(f"{name},{us:.1f},{derived}")
 
 
@@ -231,20 +241,84 @@ def bench_scheduler() -> None:
     one("greedy", iters=2)         # exact-greedy reference (paper Fig. 5)
 
 
+def bench_serve() -> None:
+    """Batched vs sequential serving on a mixed pool of 32 bucket-mates
+    (plus a few odd-geometry singletons): the tentpole dispatch-amortization
+    win — one batch-grid dispatch per bucket group instead of one compiled
+    call per request.  Bit-identity between the two paths is asserted
+    before timing."""
+    from repro.core.engine import SextansEngine
+    from repro.core.sparse import power_law_sparse, random_sparse
+    from repro.launch.serve import SpmmRequest, serve_spmm_requests
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(32):                     # one bucket: 32 mates, ragged N
+        a = power_law_sparse(512, 512, 5, seed=i)
+        n = 24 if i % 2 else 32             # both pad to the N=32 bucket
+        reqs.append(SpmmRequest(
+            a=a, b=rng.standard_normal((512, n)).astype(np.float32)))
+    for i in range(4):                      # odd geometries -> singletons
+        a = random_sparse(200 + 40 * i, 300, 0.02, seed=100 + i)
+        reqs.append(SpmmRequest(
+            a=a, b=rng.standard_normal((300, 32)).astype(np.float32)))
+
+    def engine():
+        return SextansEngine(tm=128, k0=128, chunk=8, impl="jnp")
+
+    # warm both paths (compiles), then assert bit-identity
+    outs_b, _ = serve_spmm_requests(reqs, engine(), batched=True)
+    outs_s, _ = serve_spmm_requests(reqs, engine(), batched=False)
+    for x, y in zip(outs_b, outs_s):
+        assert np.array_equal(x, y), "batched serving diverged"
+
+    for mode, batched in (("serve_batched", True), ("serve_sequential", False)):
+        best = None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            _, stats = serve_spmm_requests(reqs, engine(), batched=batched)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[0]:
+                best = (dt, stats)
+        dt, stats = best
+        us = dt * 1e6 / len(reqs)
+        rps = len(reqs) / dt
+        dpr = stats["dispatches_per_request"]
+        _row(mode, us,
+             f"{rps:.0f}req/s_{dpr:.3f}disp/req_bf{stats['batched_fraction']:.2f}",
+             extra={
+                 "requests_per_s": rps,
+                 "dispatches_per_request": dpr,
+                 "batched_fraction": stats["batched_fraction"],
+                 "groups": stats["groups"],
+                 "compute_gflops": stats["compute_gflops"],
+             })
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", choices=("small", "full"), default="small")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write rows as machine-readable JSON")
+    ap.add_argument("--only", metavar="SUBSTR", default=None,
+                    help="run only benchmark sections whose name contains "
+                         "SUBSTR (e.g. --only serve)")
     args, _ = ap.parse_known_args()
+    sections = [
+        ("table1", bench_table1),
+        ("fig7", lambda: bench_fig7(args.budget)),
+        ("fig9_fig10", lambda: bench_fig9_fig10(args.budget)),
+        ("hub_split", lambda: bench_hub_split(args.budget)),
+        ("kernels", bench_kernels),
+        ("plan", bench_plan),
+        ("scheduler", bench_scheduler),
+        ("serve", bench_serve),
+    ]
     print("name,us_per_call,derived")
-    bench_table1()
-    bench_fig7(args.budget)
-    bench_fig9_fig10(args.budget)
-    bench_hub_split(args.budget)
-    bench_kernels()
-    bench_plan()
-    bench_scheduler()
+    for name, fn in sections:
+        if args.only and args.only not in name:
+            continue
+        fn()
     if args.json:
         payload = {
             "schema": 1,

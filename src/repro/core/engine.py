@@ -40,7 +40,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.partition import cdiv
 from repro.core.sparse import SparseMatrix
@@ -54,7 +54,9 @@ __all__ = ["SextansEngine", "EngineStats"]
 @dataclasses.dataclass
 class EngineStats:
     packs: int = 0
-    calls: int = 0
+    calls: int = 0            # logical SpMM problems served (group members count)
+    dispatches: int = 0       # compiled-call dispatches issued (<= calls)
+    group_calls: int = 0      # batched group dispatches among the above
     cache_hits: int = 0
     cache_misses: int = 0
     padded_slots: int = 0
@@ -64,6 +66,11 @@ class EngineStats:
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    @property
+    def dispatches_per_call(self) -> float:
+        """< 1.0 once batched group execution starts amortizing dispatch."""
+        return self.dispatches / self.calls if self.calls else 0.0
 
 
 class SextansEngine:
@@ -184,6 +191,7 @@ class SextansEngine:
             self.stats.cache_misses += 1
             self._seen_signatures.add(sig)
         self.stats.calls += 1
+        self.stats.dispatches += 1
         if self.use_plans:
             # Pass the *caller's* object: the plan cache keys on its id, so
             # legacy PackedSpMM inputs hit the cache across calls.
@@ -191,6 +199,52 @@ class SextansEngine:
             return pl.run(b, c, alpha, beta)
         return spmm(t, b, c, alpha, beta, backend=self.impl,
                     tn=self.tn, interpret=self.interpret)
+
+    def spmm_group(
+        self,
+        tensors,
+        b: jax.Array,
+        c: Optional[jax.Array] = None,
+        alpha: float = 1.0,
+        beta: float = 0.0,
+    ) -> jax.Array:
+        """Execute a whole group of bucket-mates as ONE dispatch.
+
+        ``tensors`` is a sequence of same-geometry HFLEX SparseTensors or
+        an already-stacked batched tensor; ``b`` is the stacked dense
+        operand ``(G, K, N)`` (``c`` likewise ``(G, M, N)`` or None).
+        Returns the stacked ``(G, M, N)`` result.
+
+        Every member counts as one served problem against the *shared*
+        executable signature (G bucket-mates = 1 miss + G-1 hits — the
+        HFlex story), but only one dispatch is issued.
+        """
+        from repro.sparse_api import plan_group as _plan_group
+        from repro.sparse_api import stack_hflex
+
+        if isinstance(tensors, (list, tuple)):
+            t = stack_hflex([self._as_tensor(x) for x in tensors])
+        else:
+            t = self._as_tensor(tensors)
+        g = t.batch
+        if g is None:
+            raise ValueError("spmm_group expects a stacked (batched) tensor "
+                             "or a sequence of bucket-mates")
+        b = jnp.asarray(b)
+        n = b.shape[-1]
+        sig = self.signature(t, n, b)
+        for _ in range(g):
+            if sig in self._seen_signatures:
+                self.stats.cache_hits += 1
+            else:
+                self.stats.cache_misses += 1
+                self._seen_signatures.add(sig)
+        self.stats.calls += g
+        self.stats.dispatches += 1
+        self.stats.group_calls += 1
+        pl = _plan_group(t, n, backend=self.impl, dtype=b.dtype,
+                         tn=self.tn, interpret=self.interpret)
+        return pl.run(b, c, alpha, beta)
 
     def __call__(self, a: SparseMatrix, b, c=None, alpha: float = 1.0, beta: float = 0.0):
         return self.spmm(self.pack(a), jnp.asarray(b),
@@ -221,33 +275,50 @@ class SextansEngine:
 
     def sharded_spmm_fn(self, mesh: Mesh, packed, n: int,
                         alpha: float = 1.0, beta: float = 0.0):
-        """Build a jit'd sharded SpMM for lowering/execution on a mesh."""
-        from repro.sparse_api import SparseTensor, resolve_backend, spmm_raw
-        from repro.sparse_api.tensor import Format, PackedSpMM
+        """Build a sharded SpMM callable for execution on a mesh.
+
+        Routed through :class:`repro.sparse_api.SpmmPlan` with
+        ``plan(..., mesh=mesh)``: the executable is AOT-compiled ONCE with
+        the multi-chip shardings of :meth:`shard_specs` and shared through
+        the module-level plan cache (bucket-mates on the same mesh reuse
+        it) — the multi-chip path and the batched serving path now run on
+        one plan abstraction, and a *group* plan can carry a mesh the same
+        way (``plan_group(..., mesh=)``).
+
+        The returned ``fn(a, b, c)`` keeps the legacy signature; ``a`` must
+        share the planned sparsity *structure* (its ``values`` payload is
+        substituted per call — pass the planned matrix itself, or a
+        same-structure weight update).  A structurally different ``a`` is
+        rejected (checked once per distinct object, by identity first and
+        content only on the first sighting), never silently mis-executed
+        against the planned indices.
+        """
+        from repro.sparse_api import plan as _plan
 
         t = self._as_tensor(packed)
-        specs = self.shard_specs()
-        backend = resolve_backend(self.impl, t)
-        tn = self.tn
-        interp = self.interpret
+        pl = _plan(t, n, backend=self.impl, mesh=mesh,
+                   tn=self.tn, interpret=self.interpret)
+        d_plan = t.data
+        verified: Dict[int, object] = {}   # id(cols leaf) -> leaf (kept live)
 
-        def fn(a: SparseTensor, b, c):
-            return spmm_raw(backend, a, b, c, alpha, beta,
-                            tn=tn, interpret=interp)
+        def fn(a=None, b=None, c=None):
+            values = None
+            if a is not None:
+                ta = self._as_tensor(a)
+                d = ta.data
+                if d.cols is not d_plan.cols and id(d.cols) not in verified:
+                    same = (np.array_equal(d.cols, d_plan.cols)
+                            and np.array_equal(d.rows, d_plan.rows)
+                            and np.array_equal(d.q, d_plan.q))
+                    if not same:
+                        raise ValueError(
+                            "sharded_spmm_fn: `a` has a different sparsity "
+                            "structure than the planned matrix; only the "
+                            "values payload is substituted per call — "
+                            "build a new sharded fn for a new structure")
+                    verified[id(d.cols)] = d.cols
+                values = ta.values
+            return pl.run(b, c, alpha, beta, values=values)
 
-        d = t.data
-        pk_shard = PackedSpMM(
-            vals=specs["vals"], cols=specs["cols"], rows=specs["rows"],
-            q=specs["q"], nse=specs["nse"],
-            m=d.m, k=d.k, tm=d.tm, k0=d.k0,
-            chunk=d.chunk, interleaved=d.interleaved, nnz=d.nnz,
-        )
-        t_shard = SparseTensor(data=pk_shard, format=Format.HFLEX, shape=t.shape)
-        in_shardings = (
-            jax.tree.map(lambda s: NamedSharding(mesh, s), t_shard,
-                         is_leaf=lambda x: isinstance(x, P)),
-            NamedSharding(mesh, specs["b"]),
-            NamedSharding(mesh, specs["c"]),
-        )
-        out_shardings = NamedSharding(mesh, specs["c"])
-        return jax.jit(fn, in_shardings=in_shardings, out_shardings=out_shardings)
+        fn.plan = pl
+        return fn

@@ -49,14 +49,14 @@ __all__ = ["sextans_spmm_pallas"]
 
 
 def _kernel(
-    q_ref,            # (MB, NW) int32, scalar prefetch (SMEM)
-    vals_ref,         # (1, 1, LW) f32
-    cols_ref,         # (1, 1, LW) i32
-    rows_ref,         # (1, 1, LW) i32
-    b_ref,            # (K0, TN)
-    cin_ref,          # (TM, TN)
+    q_ref,            # ([G,] MB, NW) int32, scalar prefetch (SMEM)
+    vals_ref,         # ([1,] 1, 1, LW) f32
+    cols_ref,         # ([1,] 1, 1, LW) i32
+    rows_ref,         # ([1,] 1, 1, LW) i32
+    b_ref,            # ([1,] K0, TN)
+    cin_ref,          # ([1,] TM, TN)
     ab_ref,           # (1, 2) f32 in SMEM: [alpha, beta] (traced epilogue)
-    out_ref,          # (TM, TN)
+    out_ref,          # ([1,] TM, TN)
     acc_ref,          # VMEM scratch (TM, TN) f32
     *,
     tm: int,
@@ -64,15 +64,30 @@ def _kernel(
     chunk: int,
     nw: int,
     gather: str,
+    batched: bool,
 ):
-    w = pl.program_id(2)
+    # Batched execution prepends a group dimension to the grid: every block
+    # operand gains a leading size-1 axis and the program ids shift by one.
+    # The per-(group, block, tile, window) body is otherwise identical — a
+    # whole group of bucket-mates runs as ONE kernel launch.
+    off = 1 if batched else 0
+    w = pl.program_id(2 + off)
 
     @pl.when(w == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    m = pl.program_id(0)
-    count = q_ref[m, w]                       # real (chunk-ceiled) nnz here
+    m = pl.program_id(off)
+    if batched:
+        count = q_ref[pl.program_id(0), m, w]
+    else:
+        count = q_ref[m, w]                   # real (chunk-ceiled) nnz here
+
+    def _slab(ref, sl):
+        return ref[0, 0, 0, sl] if batched else ref[0, 0, sl]
+
+    def _tile(ref):
+        return ref[0] if batched else ref[...]
 
     # Empty-slab skip: a (block, window) pair with zero non-zeros (sparsity
     # structure, known from the prefetched pointer matrix q) contributes
@@ -82,7 +97,7 @@ def _kernel(
     @pl.when(count > 0)
     def _process_window():
         nchunks = count // chunk
-        bwin = b_ref[...].astype(jnp.float32)  # (K0, TN) window, VMEM-resident
+        bwin = _tile(b_ref).astype(jnp.float32)  # (K0, TN) window in VMEM
         # Loop-invariant one-hot iotas, hoisted out of the chunk loop.
         row_iota = jax.lax.broadcasted_iota(jnp.int32, (tm, chunk), 0)
         col_iota = (jax.lax.broadcasted_iota(jnp.int32, (chunk, k0), 1)
@@ -90,9 +105,9 @@ def _kernel(
 
         def body(ci, acc):
             sl = pl.ds(ci * chunk, chunk)
-            v = vals_ref[0, 0, sl].astype(jnp.float32)        # (CH,)
-            c = cols_ref[0, 0, sl]                            # (CH,)
-            r = rows_ref[0, 0, sl]                            # (CH,)
+            v = _slab(vals_ref, sl).astype(jnp.float32)       # (CH,)
+            c = _slab(cols_ref, sl)                           # (CH,)
+            r = _slab(rows_ref, sl)                           # (CH,)
             if gather == "onehot":
                 # (CH, K0) one-hot of column ids  @  (K0, TN) window
                 oh_c = (col_iota == c[:, None]).astype(jnp.float32)
@@ -116,9 +131,13 @@ def _kernel(
     def _epilogue():
         alpha = ab_ref[0, 0]
         beta = ab_ref[0, 1]
-        out_ref[...] = (
-            alpha * acc_ref[...] + beta * cin_ref[...].astype(jnp.float32)
+        res = (
+            alpha * acc_ref[...] + beta * _tile(cin_ref).astype(jnp.float32)
         ).astype(out_ref.dtype)
+        if batched:
+            out_ref[0] = res
+        else:
+            out_ref[...] = res
 
 
 @functools.partial(
@@ -126,12 +145,12 @@ def _kernel(
     static_argnames=("tm", "k0", "chunk", "tn", "gather", "interpret"),
 )
 def sextans_spmm_pallas(
-    vals: jax.Array,      # (MB, NW, LW) f32
-    cols: jax.Array,      # (MB, NW, LW) i32
-    rows: jax.Array,      # (MB, NW, LW) i32
-    q: jax.Array,         # (MB, NW) i32
-    b: jax.Array,         # (NW*K0, N_pad)
-    c_in: jax.Array,      # (MB*TM, N_pad)
+    vals: jax.Array,      # ([G,] MB, NW, LW) f32
+    cols: jax.Array,      # ([G,] MB, NW, LW) i32
+    rows: jax.Array,      # ([G,] MB, NW, LW) i32
+    q: jax.Array,         # ([G,] MB, NW) i32
+    b: jax.Array,         # ([G,] NW*K0, N_pad)
+    c_in: jax.Array,      # ([G,] MB*TM, N_pad)
     alpha: jax.Array = 1.0,   # traced scalar
     beta: jax.Array = 0.0,    # traced scalar
     *,
@@ -149,14 +168,27 @@ def sextans_spmm_pallas(
     (1, 2) SMEM block): sweeping them re-uses one compiled executable.
     ``interpret=None`` (the default) interprets only off-TPU — on a TPU the
     kernel compiles through Mosaic without the caller opting in.
+
+    4-D ``vals`` (and correspondingly 3-D ``b``/``c_in``/``q``) select the
+    *batched* grid ``(G, MB, NT, NW)``: G stacked bucket-mate matrices run
+    as one kernel launch — the dispatch-amortization analogue of the
+    paper's multi-channel HBM parallelism, with the group as the outermost
+    parallel grid dimension.
     """
     interpret = _resolve_interpret(interpret)
-    mb, nw, lw = vals.shape
-    kpad, npad = b.shape
+    batched = vals.ndim == 4
+    mb, nw, lw = vals.shape[-3:]
+    kpad, npad = b.shape[-2:]
     assert kpad == nw * k0, (kpad, nw, k0)
-    assert c_in.shape == (mb * tm, npad)
     assert npad % tn == 0
     nt = npad // tn
+    if batched:
+        g_sz = vals.shape[0]
+        assert q.shape == (g_sz, mb, nw)
+        assert b.shape == (g_sz, kpad, npad)
+        assert c_in.shape == (g_sz, mb * tm, npad)
+    else:
+        assert c_in.shape == (mb * tm, npad)
 
     ab = jnp.stack(
         [jnp.asarray(alpha, jnp.float32), jnp.asarray(beta, jnp.float32)]
@@ -164,13 +196,25 @@ def sextans_spmm_pallas(
 
     kern = functools.partial(
         _kernel,
-        tm=tm, k0=k0, chunk=chunk, nw=nw, gather=gather,
+        tm=tm, k0=k0, chunk=chunk, nw=nw, gather=gather, batched=batched,
     )
-    grid = (mb, nt, nw)
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=grid,
-        in_specs=[
+    if batched:
+        grid = (g_sz, mb, nt, nw)
+        in_specs = [
+            pl.BlockSpec((1, 1, 1, lw), lambda g, m, n, w, q_: (g, m, w, 0)),
+            pl.BlockSpec((1, 1, 1, lw), lambda g, m, n, w, q_: (g, m, w, 0)),
+            pl.BlockSpec((1, 1, 1, lw), lambda g, m, n, w, q_: (g, m, w, 0)),
+            pl.BlockSpec((1, k0, tn), lambda g, m, n, w, q_: (g, w, n)),
+            pl.BlockSpec((1, tm, tn), lambda g, m, n, w, q_: (g, m, n)),
+            pl.BlockSpec((1, 2), lambda g, m, n, w, q_: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ]
+        out_specs = pl.BlockSpec((1, tm, tn), lambda g, m, n, w, q_: (g, m, n))
+        out_shape = jax.ShapeDtypeStruct((g_sz, mb * tm, npad), b.dtype)
+        semantics = ("parallel", "parallel", "parallel", "arbitrary")
+    else:
+        grid = (mb, nt, nw)
+        in_specs = [
             pl.BlockSpec((1, 1, lw), lambda m, n, w, q_: (m, w, 0)),
             pl.BlockSpec((1, 1, lw), lambda m, n, w, q_: (m, w, 0)),
             pl.BlockSpec((1, 1, lw), lambda m, n, w, q_: (m, w, 0)),
@@ -178,16 +222,23 @@ def sextans_spmm_pallas(
             pl.BlockSpec((tm, tn), lambda m, n, w, q_: (m, n)),
             pl.BlockSpec((1, 2), lambda m, n, w, q_: (0, 0),
                          memory_space=pltpu.SMEM),
-        ],
-        out_specs=pl.BlockSpec((tm, tn), lambda m, n, w, q_: (m, n)),
+        ]
+        out_specs = pl.BlockSpec((tm, tn), lambda m, n, w, q_: (m, n))
+        out_shape = jax.ShapeDtypeStruct((mb * tm, npad), b.dtype)
+        semantics = ("parallel", "parallel", "arbitrary")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((tm, tn), jnp.float32)],
     )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((mb * tm, npad), b.dtype),
+        out_shape=out_shape,
         interpret=interpret,
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary"),
+            dimension_semantics=semantics,
         ),
     )(q, vals, cols, rows, b, c_in, ab)

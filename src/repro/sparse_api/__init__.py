@@ -16,6 +16,12 @@ Serving hot loops should prepare a :func:`plan` (an :class:`SpmmPlan`):
 backend resolution, index precompute and executable compilation happen
 once, ``plan.run(b, c, alpha, beta)`` is a bare compiled call with results
 bit-identical to ``spmm``.
+
+Bucket-mates (same slab geometry) batch into ONE dispatch:
+:func:`stack_hflex` stacks G matrices behind a leading group axis
+(``A.batch``), ``spmm`` then takes ``b`` of shape ``(G, K, N)``, and
+:func:`plan_group` prepares a single group executable; ``plan(..., mesh=)``
+carries multi-chip shardings on the same abstraction.
 """
 
 from .backends import (
@@ -28,7 +34,7 @@ from .backends import (
     set_auto_policy,
 )
 from .ops import spmm, spmm_raw
-from .plan import PLAN_STATS, SpmmPlan, clear_plan_cache, plan
+from .plan import PLAN_STATS, SpmmPlan, clear_plan_cache, plan, plan_group
 from .tensor import (
     BsrWeight,
     Format,
@@ -40,6 +46,7 @@ from .tensor import (
     from_sparse_matrix,
     pack_bsr_weight,
     pack_hflex,
+    stack_hflex,
 )
 
 __all__ = [
@@ -50,6 +57,7 @@ __all__ = [
     "spmm",
     "spmm_raw",
     "plan",
+    "plan_group",
     "SpmmPlan",
     "PLAN_STATS",
     "clear_plan_cache",
@@ -59,6 +67,7 @@ __all__ = [
     "from_bsr_weight",
     "pack_hflex",
     "pack_bsr_weight",
+    "stack_hflex",
     "Backend",
     "register_backend",
     "get_backend",

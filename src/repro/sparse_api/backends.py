@@ -152,14 +152,20 @@ def resolve_backend(name: str, a: SparseTensor, b=None,
 
 
 def _permute_rows_fwd(x: jax.Array, mb: int, tm: int) -> jax.Array:
-    """true-row layout -> interleaved block layout (r -> (r%mb)*tm + r//mb)."""
-    n = x.shape[1]
-    return x.reshape(tm, mb, n).transpose(1, 0, 2).reshape(mb * tm, n)
+    """true-row layout -> interleaved block layout (r -> (r%mb)*tm + r//mb).
+
+    Operates on the trailing (rows, n) axes; any leading (group) axes pass
+    through untouched.
+    """
+    lead, n = x.shape[:-2], x.shape[-1]
+    x = x.reshape(*lead, tm, mb, n)
+    return jnp.swapaxes(x, -3, -2).reshape(*lead, mb * tm, n)
 
 
 def _permute_rows_inv(x: jax.Array, mb: int, tm: int) -> jax.Array:
-    n = x.shape[1]
-    return x.reshape(mb, tm, n).transpose(1, 0, 2).reshape(tm * mb, n)
+    lead, n = x.shape[:-2], x.shape[-1]
+    x = x.reshape(*lead, mb, tm, n)
+    return jnp.swapaxes(x, -3, -2).reshape(*lead, tm * mb, n)
 
 
 def _hflex_global_ids(d, xp=jnp):
@@ -175,18 +181,24 @@ def _hflex_global_ids(d, xp=jnp):
     iota math), and :func:`repro.sparse_api.plan` precomputes them once on
     the host (``xp=numpy``) — same expressions, so planned and unplanned
     indices can never drift apart.
+
+    Batched payloads (leading group axis) broadcast through: the returned
+    ids are ``(G, MB*NW*LW)`` — each member carries its own structure.
     """
-    mb, nw, _ = d.vals.shape
+    mb, nw = d.vals.shape[-3], d.vals.shape[-2]
     rows = xp.asarray(d.rows)
     cols = xp.asarray(d.cols)
-    bi = xp.arange(mb, dtype=xp.int32)[:, None, None]
-    wi = xp.arange(nw, dtype=xp.int32)[None, :, None]
+    # (MB, 1, 1)/(1, NW, 1) broadcast against the *trailing* slab axes, so
+    # the same expressions serve 3-D and group-stacked 4-D payloads.
+    bi = xp.arange(mb, dtype=xp.int32).reshape(mb, 1, 1)
+    wi = xp.arange(nw, dtype=xp.int32).reshape(1, nw, 1)
     if d.interleaved:
         rows_g = rows * mb + bi            # undo block interleave
     else:
         rows_g = bi * d.tm + rows
     cols_g = cols + wi * d.k0
-    return rows_g.reshape(-1), cols_g.reshape(-1)
+    lead = rows_g.shape[:-3]
+    return rows_g.reshape(*lead, -1), cols_g.reshape(*lead, -1)
 
 
 def _hflex_flat_exec(vals, cols_g, rows_g, b, c, alpha, beta, m):
@@ -196,7 +208,24 @@ def _hflex_flat_exec(vals, cols_g, rows_g, b, c, alpha, beta, m):
     exact op sequence (one gather, one ``jax.ops.segment_sum``, fused
     epilogue), so planned and unplanned results are bit-identical; the plan
     merely feeds precomputed index operands and a cached executable.
+
+    With a leading group axis (``b`` of rank 3) the group is *folded into
+    the segment dimension*: member ``g`` scatters to segments
+    ``[g*M, (g+1)*M)`` and gathers from rows ``[g*K, (g+1)*K)`` of the
+    flattened ``b`` — one big gather + one big segment-sum for the whole
+    group (a single dispatch, no vmap).  Each member's segments receive
+    exactly the contributions the unbatched call would in the same order,
+    so results stay bit-identical per member.
     """
+    if b.ndim == 3:
+        g, k, n = b.shape
+        goff = jnp.arange(g, dtype=jnp.int32)[:, None]
+        rows_f = (rows_g + goff * m).reshape(-1)
+        cols_f = (cols_g + goff * k).reshape(-1)
+        out = _hflex_flat_exec(
+            vals.reshape(-1), cols_f, rows_f,
+            b.reshape(g * k, n), c.reshape(g * m, n), alpha, beta, g * m)
+        return out.reshape(g, m, n)
     contrib = vals[:, None].astype(jnp.float32) * b[cols_g].astype(jnp.float32)
     acc = jax.ops.segment_sum(contrib, rows_g, num_segments=m)
     return (alpha * acc + beta * c.astype(jnp.float32)).astype(b.dtype)
@@ -204,20 +233,24 @@ def _hflex_flat_exec(vals, cols_g, rows_g, b, c, alpha, beta, m):
 
 def _hflex_jnp(a: SparseTensor, b, c, alpha, beta):
     """XLA segment-sum path on the slab format — no N/K/M padding, no row
-    permutation: slab slots scatter straight to true output rows."""
+    permutation: slab slots scatter straight to true output rows.  Batched
+    tensors (leading group axis, ``b`` of shape (G, K, N)) execute as one
+    vmapped call."""
     d = a.data
     rows_g, cols_g = _hflex_global_ids(d)
-    return _hflex_flat_exec(d.vals.reshape(-1), cols_g, rows_g,
+    lead = d.vals.shape[:-3]
+    return _hflex_flat_exec(d.vals.reshape(*lead, -1), cols_g, rows_g,
                             b, c, alpha, beta, d.m)
 
 
 def _hflex_pallas(a: SparseTensor, b, c, alpha, beta, *, gather, tn, interpret):
     d = a.data
     m, k, tm, k0, mb, nw = d.m, d.k, d.tm, d.k0, d.mb, d.nw
-    n = b.shape[1]
+    n = b.shape[-1]
     npad = cdiv(n, tn) * tn
-    bp = jnp.pad(b, ((0, nw * k0 - k), (0, npad - n)))
-    cp = jnp.pad(c, ((0, mb * tm - m), (0, npad - n)))
+    lead_pad = ((0, 0),) if d.batch is not None else ()
+    bp = jnp.pad(b, (*lead_pad, (0, nw * k0 - k), (0, npad - n)))
+    cp = jnp.pad(c, (*lead_pad, (0, mb * tm - m), (0, npad - n)))
     if d.interleaved:
         cp = _permute_rows_fwd(cp, mb, tm)
     out = sextans_spmm_pallas(
@@ -227,7 +260,7 @@ def _hflex_pallas(a: SparseTensor, b, c, alpha, beta, *, gather, tn, interpret):
     )
     if d.interleaved:
         out = _permute_rows_inv(out, mb, tm)
-    return out[:m, :n]
+    return out[..., :m, :n]
 
 
 def _bsr_raw_jnp(a: SparseTensor, b):

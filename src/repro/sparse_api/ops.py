@@ -37,8 +37,12 @@ __all__ = ["spmm", "spmm_raw"]
 
 
 def _raw_reference(a: SparseTensor, b: jax.Array) -> jax.Array:
-    """A @ b through the XLA path (differentiable-by-construction)."""
-    zeros = jnp.zeros((a.shape[0], b.shape[1]), b.dtype)
+    """A @ b through the XLA path (differentiable-by-construction).
+
+    Leading (group) axes of ``b`` pass through: a batched tensor gets a
+    batched reference of shape ``(G, M, N)``.
+    """
+    zeros = jnp.zeros((*b.shape[:-2], a.shape[0], b.shape[-1]), b.dtype)
     one = jnp.asarray(1.0, jnp.float32)
     zero = jnp.asarray(0.0, jnp.float32)
     if a.format is Format.HFLEX:
@@ -81,10 +85,13 @@ def _spmm_bwd(name, okey, res, g):
         # Padding slots (position >= true per-slab count) are structural:
         # their primal value is exactly 0.0 and must stay 0.0 under training,
         # but the reference computes d out/d val_pad = alpha*g[row0]*b[col0]
-        # != 0 for them.  Mask by the true counts carried in the packing.
+        # != 0 for them.  Mask by the true counts carried in the packing
+        # (per-member counts for a batched tensor — nse carries the group
+        # axis, so the mask is per-member too).
         d = a.data
-        valid = (jax.lax.broadcasted_iota(jnp.int32, d.vals.shape, 2)
-                 < d.nse[:, :, None])
+        valid = (jax.lax.broadcasted_iota(jnp.int32, d.vals.shape,
+                                          d.vals.ndim - 1)
+                 < d.nse[..., None])
         dvals = jnp.where(valid, dvals, 0)
     # BSR tile-padding cells need no mask: padded b rows are zero and
     # out-of-bounds output columns have zero cotangent, so their grads
@@ -125,11 +132,14 @@ def spmm(
     """``alpha * A @ b + beta * c`` for a device SparseTensor ``A``.
 
     Args:
-      a: SparseTensor of shape (M, K), any registered format.
-      b: dense (K, N) array.
-      c: optional dense (M, N) array (defaults to zeros).
+      a: SparseTensor of shape (M, K), any registered format.  A *batched*
+        tensor (``a.batch == G``, see ``stack_hflex``) computes G SpMMs in
+        one dispatch.
+      b: dense (K, N) array — (G, K, N) for a batched ``a``.
+      c: optional dense (M, N) array (defaults to zeros) — (G, M, N) when
+        batched.
       alpha, beta: epilogue scalars — *traced*; sweeping them does not
-        recompile.
+        recompile.  Shared across a batched group.
       backend: a registered backend name, or "auto" (platform/format/density
         heuristic; see ``repro.sparse_api.backends``).
       **opts: static backend options (e.g. ``tn``, ``interpret``) — part of
@@ -138,12 +148,22 @@ def spmm(
     if not isinstance(a, SparseTensor):
         raise TypeError(f"spmm expects a SparseTensor, got {type(a).__name__}")
     b = jnp.asarray(b)
-    if b.ndim != 2:
-        raise ValueError(f"b must be 2-D (K, N), got shape {b.shape}")
     m, k = a.shape
-    if b.shape[0] != k:
-        raise ValueError(f"B rows {b.shape[0]} != A cols {k}")
-    c_ = jnp.zeros((m, b.shape[1]), b.dtype) if c is None else jnp.asarray(c)
+    g = a.batch
+    if g is None:
+        if b.ndim != 2:
+            raise ValueError(f"b must be 2-D (K, N), got shape {b.shape}")
+    else:
+        if b.ndim != 3 or b.shape[0] != g:
+            raise ValueError(
+                f"batched spmm (G={g}) needs b of shape (G, K, N), got "
+                f"{b.shape}")
+    if b.shape[-2] != k:
+        raise ValueError(f"B rows {b.shape[-2]} != A cols {k}")
+    cshape = (m, b.shape[-1]) if g is None else (g, m, b.shape[-1])
+    c_ = jnp.zeros(cshape, b.dtype) if c is None else jnp.asarray(c)
+    if c_.shape != cshape:
+        raise ValueError(f"c must have shape {cshape}, got {c_.shape}")
     name = _bk.resolve_backend(backend, a, b)
     okey = tuple(sorted(opts.items()))
     return _spmm_jit(name, okey, a, b, c_,

@@ -18,9 +18,9 @@ What a plan does once:
 * precomputes the flat global gather/scatter index operands (HFLEX ``jnp``
   path) or the payload operand list (Pallas / BSR paths);
 * AOT-lowers and compiles the executable, cached in a module-level table
-  keyed by the **bucketed geometry** (plus logical shape, N, dtypes and
-  backend): distinct matrices packed into the same bucket share one
-  executable and one trace — ``BACKEND_STATS["traces"]`` stays flat.
+  keyed by the **bucketed geometry** (plus logical shape, N, group size,
+  dtypes and backend): distinct matrices packed into the same bucket share
+  one executable and one trace — ``BACKEND_STATS["traces"]`` stays flat.
 
 ``run`` results are bit-identical to the unplanned ``spmm`` (they execute
 the same op sequence; see ``backends._hflex_flat_exec``), and ``alpha`` /
@@ -28,13 +28,26 @@ the same op sequence; see ``backends._hflex_flat_exec``), and ``alpha`` /
 epilogue).  ``run(values=...)`` substitutes a new non-zero payload of the
 same structure (pruned-weight serving: update weights without re-planning).
 
+**Group plans** (:func:`plan_group`) extend the same machinery to a whole
+group of bucket-mates: the G members are stacked behind a leading payload
+axis (:func:`repro.sparse_api.stack_hflex`), ``run`` takes ``b`` of shape
+``(G, K, N)``, and the entire group executes as **one** compiled-call
+dispatch.  ``values=`` substitution stays per-group (shape
+``(G, *A.values.shape[1:])``).
+
+**Mesh plans** (``plan(..., mesh=)``) carry a device mesh: the executable
+is AOT-compiled with the engine's multi-chip shardings (A row-blocks over
+``data``, B column-tiles over ``model`` — see
+``SextansEngine.shard_specs``), so the sharded multi-chip path and the
+batched serving path run through one plan abstraction.
+
 Plans are a forward/serving construct: ``run`` calls an AOT-compiled
 executable and is not differentiable — training goes through ``spmm``.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -43,13 +56,16 @@ import numpy as np
 from repro.core.hflex import bucket_geometry
 
 from . import backends as _bk
-from .tensor import Format, SparseTensor
+from .tensor import Format, PackedSpMM, SparseTensor, stack_hflex
 
-__all__ = ["SpmmPlan", "plan", "clear_plan_cache", "PLAN_STATS"]
+__all__ = ["SpmmPlan", "plan", "plan_group", "clear_plan_cache",
+           "PLAN_STATS"]
 
 # Executable-cache hits/misses (the paper counts avoided place/route runs;
-# we count avoided traces+compiles).
-PLAN_STATS: Dict[str, int] = {"exec_hits": 0, "exec_misses": 0}
+# we count avoided traces+compiles) and compiled-call dispatches (the
+# batched scheduler's amortization target: dispatches << requests).
+PLAN_STATS: Dict[str, int] = {"exec_hits": 0, "exec_misses": 0,
+                              "dispatches": 0}
 
 _EXEC_CACHE: Dict[Tuple, Any] = {}
 
@@ -59,30 +75,39 @@ def clear_plan_cache() -> None:
     _EXEC_CACHE.clear()
 
 
-def _aot_compile(key: Tuple, fn, arg_shapes):
+def _aot_compile(key: Tuple, fn, arg_shapes, in_shardings=None,
+                 out_shardings=None):
     """Lower + compile ``fn`` for ``arg_shapes`` once per cache key."""
     hit = _EXEC_CACHE.get(key)
     if hit is not None:
         PLAN_STATS["exec_hits"] += 1
         return hit
     PLAN_STATS["exec_misses"] += 1
-    compiled = jax.jit(fn).lower(*arg_shapes).compile()
+    if in_shardings is None:
+        jfn = jax.jit(fn)
+    else:
+        jfn = jax.jit(fn, in_shardings=in_shardings,
+                      out_shardings=out_shardings)
+    compiled = jfn.lower(*arg_shapes).compile()
     _EXEC_CACHE[key] = compiled
     return compiled
 
 
 class SpmmPlan:
-    """A prepared ``C = alpha * A @ B + beta * C`` for one (A, N) pair.
+    """A prepared ``C = alpha * A @ B + beta * C`` for one (A, N) pair —
+    or one (stacked group, N) pair when ``A`` is batched.
 
-    Build via :func:`plan`.  Attributes of note:
+    Build via :func:`plan` / :func:`plan_group`.  Attributes of note:
 
     * ``backend`` — the resolved backend name (never ``"auto"``).
+    * ``group`` — G for a group plan, None for a single matrix.
+    * ``mesh`` — the device mesh the executable was sharded for (or None).
     * ``exec_key`` — the executable-cache key (bucketed geometry + logical
-      shape + N + dtypes + backend/options).
+      shape + N + group size + dtypes + backend/options + mesh).
     """
 
     def __init__(self, a: SparseTensor, n: int, backend: str,
-                 opts: Dict[str, Any], dtype=jnp.float32):
+                 opts: Dict[str, Any], dtype=jnp.float32, mesh=None):
         if not isinstance(a, SparseTensor):
             raise TypeError(f"plan expects a SparseTensor, got {type(a).__name__}")
         if n <= 0:
@@ -90,13 +115,23 @@ class SpmmPlan:
         self.a = a
         self.n = int(n)
         self.m, self.k = a.shape
+        self.group = a.batch
+        self.mesh = mesh
         self.backend = _bk.resolve_backend(backend, a)
         self.opts = dict(opts)
         self.dtype = jnp.dtype(dtype)
         okey = tuple(sorted(self.opts.items()))
 
         m, k, n = self.m, self.k, self.n
-        flat = (a.format is Format.HFLEX and self.backend == "jnp")
+        g = self.group
+        # The flat path host-precomputes gather/scatter ids — a win when one
+        # plan serves many runs.  Group plans are typically built per flush
+        # and run once, so they take the payload path instead: the ids are
+        # derived in-trace (backends._hflex_jnp) and fused by XLA, and plan
+        # construction is a tree-flatten.  Results are bit-identical either
+        # way (same op sequence on the same index values).
+        flat = (a.format is Format.HFLEX and self.backend == "jnp"
+                and mesh is None and g is None)
         self._flat = flat
         if a.format is Format.HFLEX:
             d = a.data
@@ -105,17 +140,20 @@ class SpmmPlan:
             d = a.data
             bucket = (d.blocks.shape[0], d.k, d.f, d.tk, d.tf)
         self.exec_key = ("flat" if flat else "payload", self.backend, okey,
-                         a.format, a.geometry, bucket, (m, k, n),
-                         str(self.dtype))
+                         a.format, a.geometry, bucket, (m, k, n), g,
+                         str(self.dtype), mesh)
 
         if flat:
             # Host-precomputed flat gather/scatter indices (same layout
             # helper as the unplanned backend, evaluated in numpy): the
             # traced body is exactly backends._hflex_flat_exec — one gather,
             # one segment_sum, fused epilogue.  No pad, no permute, no iota.
+            # Group plans carry the leading G axis straight through (the
+            # body vmaps over it — still one compiled-call dispatch).
             rows_g, cols_g = _bk._hflex_global_ids(d, xp=np)
+            lead = d.vals.shape[:-3]
             self._operands = (
-                jnp.asarray(d.vals).reshape(-1),
+                jnp.asarray(d.vals).reshape(*lead, -1),
                 jnp.asarray(cols_g),
                 jnp.asarray(rows_g),
             )
@@ -147,36 +185,80 @@ class SpmmPlan:
 
             self._traced = traced
 
-        b_s = jax.ShapeDtypeStruct((k, n), self.dtype)
-        c_s = jax.ShapeDtypeStruct((m, n), self.dtype)
+        self._bshape = (k, n) if g is None else (g, k, n)
+        self._cshape = (m, n) if g is None else (g, m, n)
+        b_s = jax.ShapeDtypeStruct(self._bshape, self.dtype)
+        c_s = jax.ShapeDtypeStruct(self._cshape, self.dtype)
         s_s = jax.ShapeDtypeStruct((), jnp.float32)
         arg_shapes = tuple(
             jax.ShapeDtypeStruct(x.shape, x.dtype) for x in self._operands
         ) + (b_s, c_s, s_s, s_s)
-        self._compiled = _aot_compile(self.exec_key, self._traced, arg_shapes)
+        in_sh = out_sh = None
+        if mesh is not None:
+            in_sh, out_sh = self._mesh_shardings(mesh)
+        self._compiled = _aot_compile(self.exec_key, self._traced, arg_shapes,
+                                      in_shardings=in_sh,
+                                      out_shardings=out_sh)
         self._zero_c: Optional[jax.Array] = None
         # Epilogue scalars are runtime operands; cache their device buffers
         # per value so the hot loop never re-commits host scalars.
         self._ab_cache: Dict[Tuple[float, float], Tuple[Any, Any]] = {}
 
+    def _mesh_shardings(self, mesh):
+        """Operand/result NamedShardings for a mesh plan: the engine's
+        multi-chip layout (A row-blocks + C rows over ``data``, B/C columns
+        over ``model``), lifted over the group axis when batched (groups
+        replicate over the mesh; each chip runs its row shard of every
+        member)."""
+        from jax.sharding import NamedSharding
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.engine import SextansEngine
+
+        if self.a.format is not Format.HFLEX:
+            raise ValueError("mesh plans support Format.HFLEX only")
+        specs = SextansEngine.shard_specs()
+        batched = self.group is not None
+
+        def lift(s: P) -> P:
+            return P(None, *s) if batched else s
+
+        d = self.a.data
+        pk_spec = PackedSpMM(
+            vals=lift(specs["vals"]), cols=lift(specs["cols"]),
+            rows=lift(specs["rows"]), q=lift(specs["q"]),
+            nse=lift(specs["nse"]),
+            m=d.m, k=d.k, tm=d.tm, k0=d.k0, chunk=d.chunk,
+            interleaved=d.interleaved, nnz=d.nnz,
+        )
+        t_spec = SparseTensor(data=pk_spec, format=self.a.format,
+                              shape=self.a.shape, nse=self.a.nse)
+        leaf_specs = jax.tree_util.tree_flatten(
+            t_spec, is_leaf=lambda x: isinstance(x, P))[0]
+        nd = lambda s: NamedSharding(mesh, s)
+        in_sh = tuple(nd(s) for s in leaf_specs) + (
+            nd(lift(specs["b"])), nd(lift(specs["c"])), nd(P()), nd(P()))
+        return in_sh, nd(lift(specs["c"]))
+
     # -- execution ----------------------------------------------------------
 
     def run(self, b, c=None, alpha=1.0, beta=0.0, *, values=None) -> jax.Array:
-        """Execute the planned SpMM.
+        """Execute the planned SpMM: one compiled-call dispatch.
 
-        ``b`` must be ``(K, N)`` of the planned dtype; ``c`` defaults to a
-        cached zeros block.  ``alpha``/``beta`` are runtime operands (no
-        recompile).  ``values`` substitutes a new non-zero payload with the
-        packed structure of ``A`` (same shape as ``A.values``).
+        ``b`` must be ``(K, N)`` — ``(G, K, N)`` for a group plan — of the
+        planned dtype; ``c`` defaults to a cached zeros block.
+        ``alpha``/``beta`` are runtime operands (no recompile).  ``values``
+        substitutes a new non-zero payload with the packed structure of
+        ``A`` (same shape as ``A.values`` — per-group for a group plan).
         """
         b = jnp.asarray(b)
-        if b.shape != (self.k, self.n) or b.dtype != self.dtype:
+        if b.shape != self._bshape or b.dtype != self.dtype:
             raise ValueError(
-                f"plan expects b of shape {(self.k, self.n)} dtype "
+                f"plan expects b of shape {self._bshape} dtype "
                 f"{self.dtype}, got {b.shape} {b.dtype}")
         if c is None:
             if self._zero_c is None:
-                self._zero_c = jnp.zeros((self.m, self.n), self.dtype)
+                self._zero_c = jnp.zeros(self._cshape, self.dtype)
             c = self._zero_c
         else:
             c = jnp.asarray(c)
@@ -195,18 +277,23 @@ class SpmmPlan:
         ops = self._operands
         if values is not None:
             values = jnp.asarray(values)
-            if self._flat:                     # flat path stores vals 1-D
-                values = values.reshape(-1)
+            if self._flat:                     # flat path stores vals flat
+                lead = values.shape[:-3] if values.ndim >= 3 else ()
+                values = values.reshape(*lead, -1)
             ops = (ops[:self._values_slot] + (values,)
                    + ops[self._values_slot + 1:])
+        PLAN_STATS["dispatches"] += 1
         return self._compiled(*ops, b, c, alpha, beta)
 
     def __call__(self, b, c=None, alpha=1.0, beta=0.0, **kw) -> jax.Array:
         return self.run(b, c, alpha, beta, **kw)
 
     def __repr__(self) -> str:
-        return (f"SpmmPlan(shape=({self.m}, {self.k})@{self.n}, "
-                f"backend={self.backend!r}, format={self.a.format.value})")
+        gtag = f"x{self.group}" if self.group else ""
+        mtag = ", mesh" if self.mesh is not None else ""
+        return (f"SpmmPlan(shape=({self.m}, {self.k}){gtag}@{self.n}, "
+                f"backend={self.backend!r}, format={self.a.format.value}"
+                f"{mtag})")
 
 
 def plan(
@@ -215,6 +302,7 @@ def plan(
     *,
     backend: str = "auto",
     dtype=jnp.float32,
+    mesh=None,
     **opts,
 ) -> SpmmPlan:
     """Prepare ``alpha * A @ b + beta * c`` for dense operands of width ``n``.
@@ -222,6 +310,39 @@ def plan(
     Performs padding/permutation precompute, backend resolution and
     executable compilation **once**; :meth:`SpmmPlan.run` then only invokes
     the cached executable.  Executables are shared across matrices whose
-    bucketed geometry, logical shape and dtypes coincide.
+    bucketed geometry, logical shape, group size and dtypes coincide.
+
+    ``mesh`` AOT-compiles the executable with the engine's multi-chip
+    shardings (see :meth:`SpmmPlan._mesh_shardings`); a *group* plan can
+    carry a mesh too, unifying the sharded and batched serving paths.
+    ``a`` may be batched (``a.batch == G``) — or use :func:`plan_group`.
     """
-    return SpmmPlan(a, n, backend, opts, dtype=dtype)
+    return SpmmPlan(a, n, backend, opts, dtype=dtype, mesh=mesh)
+
+
+def plan_group(
+    tensors: Union[SparseTensor, Sequence[SparseTensor]],
+    n: int,
+    *,
+    backend: str = "auto",
+    dtype=jnp.float32,
+    mesh=None,
+    **opts,
+) -> SpmmPlan:
+    """Prepare ONE executable for a whole group of bucket-mates.
+
+    ``tensors`` is either a sequence of same-geometry HFLEX SparseTensors
+    (stacked here via :func:`repro.sparse_api.stack_hflex`) or an
+    already-stacked batched tensor.  The returned plan's :meth:`SpmmPlan.run`
+    takes ``b`` of shape ``(G, K, N)`` (ragged-N callers pad their columns
+    up to the planned ``n``) and executes the whole group as a single
+    compiled-call dispatch; results are bit-identical to running each
+    member through its own plan.
+    """
+    if isinstance(tensors, SparseTensor):
+        a = tensors
+        if a.batch is None:
+            a = stack_hflex([a])
+    else:
+        a = stack_hflex(tensors)
+    return SpmmPlan(a, n, backend, opts, dtype=dtype, mesh=mesh)
