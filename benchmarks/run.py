@@ -16,6 +16,9 @@ trajectory can accumulate across PRs):
   serve_*    — batched (geometry-bucketing scheduler) vs sequential
                serving on a mixed pool of bucket-mates (bit-identity
                asserted; requests/s and dispatches/request)
+  stream_*   — out-of-core K-window streaming vs the resident plan at
+               several device_bytes caps (bit-identity asserted; Mnnz/s,
+               window dispatches, peak device working set)
 
 All wall-clock numbers use ``time.perf_counter`` (monotonic,
 high-resolution); JAX results are ``block_until_ready``-fenced.
@@ -295,6 +298,54 @@ def bench_serve() -> None:
              })
 
 
+def bench_stream() -> None:
+    """Out-of-core K-window streaming vs the resident plan at several
+    ``device_bytes`` caps: achieved Mnnz/s, window dispatches per run, and
+    the device working set (peak_payload_bytes) actually pinned.  Streaming
+    is bit-identical to the resident path — asserted before timing — so the
+    rows measure pure pipeline overhead: what it costs to run a matrix the
+    chip could not hold."""
+    import repro.sparse_api as sp
+    from repro.core.sparse import power_law_sparse
+
+    rng = np.random.default_rng(0)
+    a = power_law_sparse(1024, 8192, 6, seed=3)
+    A = sp.from_sparse_matrix(a, tm=128, k0=128, chunk=8, bucket=True)
+    n = 16
+    b = rng.standard_normal((8192, n)).astype(np.float32)
+    payload = A.nbytes
+
+    resident = sp.plan(A, n, backend="jnp")
+    y_ref = np.asarray(resident.run(b))
+    us_r = _time_call(lambda: resident.run(b).block_until_ready(), iters=10)
+    mnnz_r = a.nnz / (us_r / 1e6) / 1e6
+    _row("stream_spmm_resident", us_r,
+         f"{mnnz_r:.1f}Mnnz/s_payload{payload}B",
+         extra={"payload_bytes": payload, "mnnz_per_s": mnnz_r})
+
+    for frac in (4, 16, 64):
+        cap = payload // frac
+        P = sp.plan(A, n, backend="jnp", device_bytes=cap)
+        assert isinstance(P, sp.StreamingPlan), "cap did not select streaming"
+        y = np.asarray(P.run(b))
+        bitexact = bool(np.array_equal(y, y_ref))
+        assert bitexact, "streaming diverged from resident plan"
+        us = _time_call(lambda: P.run(b).block_until_ready(), iters=10)
+        mnnz = a.nnz / (us / 1e6) / 1e6
+        _row(f"stream_spmm_cap_payload/{frac}", us,
+             f"{mnnz:.1f}Mnnz/s_{P.steps}disp_wc{P.window_chunk}_bitexact",
+             extra={
+                 "streamed": 1,
+                 "device_bytes": cap,
+                 "window_dispatches": P.steps,
+                 "window_chunk": P.window_chunk,
+                 "peak_payload_bytes": P.peak_payload_bytes,
+                 "payload_bytes": payload,
+                 "mnnz_per_s": mnnz,
+                 "bit_identical": bitexact,
+             })
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", choices=("small", "full"), default="small")
@@ -313,6 +364,7 @@ def main() -> None:
         ("plan", bench_plan),
         ("scheduler", bench_scheduler),
         ("serve", bench_serve),
+        ("stream", bench_stream),
     ]
     print("name,us_per_call,derived")
     for name, fn in sections:

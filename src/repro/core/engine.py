@@ -55,8 +55,12 @@ __all__ = ["SextansEngine", "EngineStats"]
 class EngineStats:
     packs: int = 0
     calls: int = 0            # logical SpMM problems served (group members count)
-    dispatches: int = 0       # compiled-call dispatches issued (<= calls)
+    dispatches: int = 0       # compiled-call dispatches issued (group: 1 for
+                              # G members; streaming: window steps + epilogue)
     group_calls: int = 0      # batched group dispatches among the above
+    streamed: int = 0         # problems served through the out-of-core tier
+    window_dispatches: int = 0  # K0-window-chunk dispatches (streaming)
+    peak_payload_bytes: int = 0  # max device working set of a streamed call
     cache_hits: int = 0
     cache_misses: int = 0
     padded_slots: int = 0
@@ -95,6 +99,10 @@ class SextansEngine:
         self.interpret = interpret
         self.use_plans = use_plans
         self.stats = EngineStats()
+        #: the StreamingPlan the most recent spmm_streaming call ran
+        #: through — per-call stats (steps, peak_payload_bytes) for callers
+        #: like the serving scheduler, without re-deriving the cache key.
+        self.last_streaming_plan = None
         self._seen_signatures: set = set()
         # (id(packed), n, dtype) -> (packed, SpmmPlan); the entry holds the
         # caller's object so its id stays live (and unique) while cached.
@@ -145,10 +153,14 @@ class SextansEngine:
     #: plan_for keeps at most this many plans; oldest evicted first.
     PLAN_CACHE_CAP = 256
 
-    def plan_for(self, packed, n: int, dtype=None) -> "SpmmPlan":
-        """The engine's :class:`SpmmPlan` for (matrix, N) — built on first
-        use, then a dictionary lookup.  Executables are shared across
-        bucket-mates through the module-level plan cache.
+    def plan_for(self, packed, n: int, dtype=None, *, stream: bool = False,
+                 device_bytes: Optional[int] = None,
+                 window_chunk: Optional[int] = None):
+        """The engine's plan for (matrix, N) — built on first use, then a
+        dictionary lookup.  Executables are shared across bucket-mates
+        through the module-level plan cache.  ``stream=True`` builds/caches
+        the out-of-core :class:`repro.sparse_api.StreamingPlan` instead
+        (same cache, extended key).
 
         Keyed by ``id(packed)`` — the *caller-held* object, so legacy
         ``PackedSpMM`` inputs (which get wrapped in a fresh SparseTensor per
@@ -160,14 +172,28 @@ class SextansEngine:
 
         from repro.sparse_api import plan as _plan
 
+        if not stream and (device_bytes is not None
+                           or window_chunk is not None):
+            # the cache key would not record them, so a streaming plan
+            # could silently shadow the resident entry — refuse instead
+            raise ValueError(
+                "device_bytes/window_chunk require stream=True "
+                "(plan_for's non-stream path always builds resident plans)")
         dtype = jnp.dtype(dtype or jnp.float32)
         key = (id(packed), int(n), str(dtype))
+        if stream:
+            key += ("stream", device_bytes, window_chunk)
         hit = self._plans.get(key)
         if hit is not None:
             return hit[1]
         t = self._as_tensor(packed)
-        pl = _plan(t, n, backend=self.impl, dtype=dtype,
-                   tn=self.tn, interpret=self.interpret)
+        if stream:
+            pl = _plan(t, n, backend=self.impl, dtype=dtype, stream=True,
+                       device_bytes=device_bytes, window_chunk=window_chunk,
+                       tn=self.tn, interpret=self.interpret)
+        else:
+            pl = _plan(t, n, backend=self.impl, dtype=dtype,
+                       tn=self.tn, interpret=self.interpret)
         while len(self._plans) >= self.PLAN_CACHE_CAP:
             self._plans.pop(next(iter(self._plans)))
         self._plans[key] = (packed, pl)
@@ -199,6 +225,52 @@ class SextansEngine:
             return pl.run(b, c, alpha, beta)
         return spmm(t, b, c, alpha, beta, backend=self.impl,
                     tn=self.tn, interpret=self.interpret)
+
+    def spmm_streaming(
+        self,
+        packed,
+        b,
+        c: Optional[jax.Array] = None,
+        alpha: float = 1.0,
+        beta: float = 0.0,
+        *,
+        device_bytes: Optional[int] = None,
+        window_chunk: Optional[int] = None,
+    ) -> jax.Array:
+        """Execute one SpMM through the out-of-core streaming tier.
+
+        The matrix's slab payload stays host-side; K0-window chunks stream
+        through a persistent C accumulator (``repro.sparse_api.
+        StreamingPlan``), so problems whose payload exceeds ``device_bytes``
+        still run — the workload the paper's off-chip streaming was built
+        for.  ``b`` may be a host (numpy) array: only chunk-sized slices
+        are ever transferred.  Results are bit-identical to :meth:`spmm`.
+
+        Counts as one served problem and ``steps + 1`` dispatches
+        (``stats.window_dispatches`` tracks the window steps;
+        ``stats.peak_payload_bytes`` the device working set high-water).
+        """
+        t = self._as_tensor(packed)
+        n = int(np.shape(b)[-1])               # shape only — never copy b
+        dtype = jnp.dtype(getattr(b, "dtype", jnp.float32))
+        pl = self.plan_for(packed, n, dtype, stream=True,
+                           device_bytes=device_bytes,
+                           window_chunk=window_chunk)
+        self.last_streaming_plan = pl
+        npad = cdiv(n, self.tn) * self.tn
+        sig = (*t.geometry, npad, pl.backend, "stream", pl.window_chunk)
+        if sig in self._seen_signatures:
+            self.stats.cache_hits += 1
+        else:
+            self.stats.cache_misses += 1
+            self._seen_signatures.add(sig)
+        self.stats.calls += 1
+        self.stats.streamed += 1
+        self.stats.dispatches += pl.steps + 1
+        self.stats.window_dispatches += pl.steps
+        self.stats.peak_payload_bytes = max(self.stats.peak_payload_bytes,
+                                            pl.peak_payload_bytes)
+        return pl.run(b, c, alpha, beta)
 
     def spmm_group(
         self,

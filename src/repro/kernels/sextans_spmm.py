@@ -65,6 +65,7 @@ def _kernel(
     nw: int,
     gather: str,
     batched: bool,
+    accumulate: bool,
 ):
     # Batched execution prepends a group dimension to the grid: every block
     # operand gains a leading size-1 axis and the program ids shift by one.
@@ -75,7 +76,14 @@ def _kernel(
 
     @pl.when(w == 0)
     def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        if accumulate:
+            # Out-of-core streaming: seed from the carried f32 accumulator
+            # (c_in doubles as acc-in), so a chain of window-chunk dispatches
+            # performs the exact add sequence of one full-NW launch.
+            acc_ref[...] = (cin_ref[0] if batched
+                            else cin_ref[...]).astype(jnp.float32)
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
 
     m = pl.program_id(off)
     if batched:
@@ -129,11 +137,17 @@ def _kernel(
 
     @pl.when(w == nw - 1)
     def _epilogue():
-        alpha = ab_ref[0, 0]
-        beta = ab_ref[0, 1]
-        res = (
-            alpha * acc_ref[...] + beta * _tile(cin_ref).astype(jnp.float32)
-        ).astype(out_ref.dtype)
+        if accumulate:
+            # No epilogue: emit the raw f32 accumulator for the next chunk
+            # dispatch (alpha/beta are applied once, after the last chunk).
+            res = acc_ref[...].astype(out_ref.dtype)
+        else:
+            alpha = ab_ref[0, 0]
+            beta = ab_ref[0, 1]
+            res = (
+                alpha * acc_ref[...]
+                + beta * _tile(cin_ref).astype(jnp.float32)
+            ).astype(out_ref.dtype)
         if batched:
             out_ref[0] = res
         else:
@@ -142,7 +156,8 @@ def _kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("tm", "k0", "chunk", "tn", "gather", "interpret"),
+    static_argnames=("tm", "k0", "chunk", "tn", "gather", "interpret",
+                     "accumulate"),
 )
 def sextans_spmm_pallas(
     vals: jax.Array,      # ([G,] MB, NW, LW) f32
@@ -160,6 +175,7 @@ def sextans_spmm_pallas(
     tn: int = 128,
     gather: str = "gather",
     interpret: Optional[bool] = None,
+    accumulate: bool = False,
 ) -> jax.Array:
     """Raw kernel entry on pre-padded operands. Use repro.sparse_api.spmm for
     the user-facing API (handles packing, padding, permutation, autodiff).
@@ -174,8 +190,18 @@ def sextans_spmm_pallas(
     as one kernel launch — the dispatch-amortization analogue of the
     paper's multi-channel HBM parallelism, with the group as the outermost
     parallel grid dimension.
+
+    ``accumulate=True`` is the out-of-core streaming step: ``c_in`` is a
+    carried f32 accumulator that seeds the VMEM scratch at window 0, the
+    epilogue is suppressed, and the raw f32 accumulator is emitted.  A
+    chain of such dispatches over consecutive K0-window chunks performs the
+    exact per-(row, tile) add sequence of one full-NW launch, so streaming
+    a matrix larger than device memory stays bit-identical to the resident
+    path (apply alpha/beta once on the final accumulator).
     """
     interpret = _resolve_interpret(interpret)
+    if accumulate:
+        assert c_in.dtype == jnp.float32, "accumulate carries an f32 acc"
     batched = vals.ndim == 4
     mb, nw, lw = vals.shape[-3:]
     kpad, npad = b.shape[-2:]
@@ -197,7 +223,9 @@ def sextans_spmm_pallas(
     kern = functools.partial(
         _kernel,
         tm=tm, k0=k0, chunk=chunk, nw=nw, gather=gather, batched=batched,
+        accumulate=accumulate,
     )
+    out_dtype = jnp.float32 if accumulate else b.dtype
     if batched:
         grid = (g_sz, mb, nt, nw)
         in_specs = [
@@ -210,7 +238,7 @@ def sextans_spmm_pallas(
                          memory_space=pltpu.SMEM),
         ]
         out_specs = pl.BlockSpec((1, tm, tn), lambda g, m, n, w, q_: (g, m, n))
-        out_shape = jax.ShapeDtypeStruct((g_sz, mb * tm, npad), b.dtype)
+        out_shape = jax.ShapeDtypeStruct((g_sz, mb * tm, npad), out_dtype)
         semantics = ("parallel", "parallel", "parallel", "arbitrary")
     else:
         grid = (mb, nt, nw)
@@ -224,7 +252,7 @@ def sextans_spmm_pallas(
                          memory_space=pltpu.SMEM),
         ]
         out_specs = pl.BlockSpec((tm, tn), lambda m, n, w, q_: (m, n))
-        out_shape = jax.ShapeDtypeStruct((mb * tm, npad), b.dtype)
+        out_shape = jax.ShapeDtypeStruct((mb * tm, npad), out_dtype)
         semantics = ("parallel", "parallel", "arbitrary")
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

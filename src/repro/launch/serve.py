@@ -18,7 +18,11 @@ Two serving paths, matching the paper's two deployment stories:
    reports the compile-cache hit rate plus grouping stats
    (``groups``, ``batched_fraction``, ``dispatches_per_request``) and
    ``compute_gflops`` (wall − preprocess, matching how the paper separates
-   preprocessing from execution).
+   preprocessing from execution).  With a ``device_bytes`` budget, requests
+   whose packed payload exceeds it take the *out-of-core streaming lane*
+   (``SextansEngine.spmm_streaming``): K0-window chunks stream through a
+   persistent C accumulator — multiple dispatches per request, tracked in
+   ``streamed`` / ``window_dispatches`` / ``peak_payload_bytes``.
 
 2. **LM serving**: prefill + token-by-token decode with a KV/state cache
    (examples/serve_lm.py drives this at CPU scale; the decode dry-run cells
@@ -77,23 +81,44 @@ class SpmmScheduler:
     and segment-sum prefixes are exact).  Everything else executes as
     singleton plan calls.
 
+    ``device_bytes`` adds the *out-of-core streaming lane*: a request whose
+    packed payload exceeds the budget bypasses group stacking and executes
+    through :meth:`SextansEngine.spmm_streaming` — K0-window chunks through
+    a persistent C accumulator, multiple dispatches per request, still
+    bit-identical.  Oversized traffic therefore no longer fails or pins
+    more device memory than exists; it just rides the streaming tier.
+
     ``stats`` accumulates across flushes:
 
     * ``requests`` / ``groups`` / ``dispatches`` — problems served vs
-      compiled calls issued (the amortization win: dispatches << requests);
+      compiled calls issued.  ``dispatches`` counts *every* compiled call
+      consistently at request granularity: a group contributes 1 for its G
+      members together, a singleton 1, and a streamed request its
+      ``window steps + 1`` (so ``dispatches_per_request`` < 1 measures
+      batching amortization and > 1 measures streaming depth);
     * ``batched_requests`` → ``batched_fraction`` — how much traffic rode
       a group dispatch;
+    * ``streamed`` / ``window_dispatches`` / ``peak_payload_bytes`` — the
+      streaming lane: requests routed, window-chunk dispatches issued, and
+      the device working-set high-water of any streamed request;
     * ``preprocess_s`` vs ``wall_s`` — pack() time separated from
-      execution, the paper's preprocessing/execution split.
+      execution, the paper's preprocessing/execution split;
+    * ``last_flush`` — the same counters scoped to the most recent flush
+      (per-flush reporting: multi-dispatch streaming requests made the
+      cumulative numbers alone ambiguous).
     """
 
     def __init__(self, engine: Optional[SextansEngine] = None,
-                 max_group: int = 64):
+                 max_group: int = 64,
+                 device_bytes: Optional[int] = None,
+                 window_chunk: Optional[int] = None):
         self.engine = engine or SextansEngine(tm=128, k0=512, chunk=8,
                                               impl="jnp")
         if max_group < 1:
             raise ValueError("max_group must be >= 1")
         self.max_group = max_group
+        self.device_bytes = device_bytes
+        self.window_chunk = window_chunk
         self._pending: List[Tuple[int, SpmmRequest]] = []
         self._next_ticket = 0
         self.stats: Dict[str, Any] = {
@@ -101,10 +126,14 @@ class SpmmScheduler:
             "groups": 0,
             "dispatches": 0,
             "batched_requests": 0,
+            "streamed": 0,
+            "window_dispatches": 0,
+            "peak_payload_bytes": 0,
             "flushes": 0,
             "wall_s": 0.0,
             "preprocess_s": 0.0,
             "flops": 0.0,
+            "last_flush": {},
         }
 
     # -- queueing -----------------------------------------------------------
@@ -162,17 +191,27 @@ class SpmmScheduler:
         t0 = time.perf_counter()
         pack_s = 0.0
         groups: Dict[Any, List] = {}
+        stream_lane: List[Tuple[int, SpmmRequest, Any]] = []
         for ticket, r in pending:
             tp = time.perf_counter()
             t = eng.pack(r.a)
             pack_s += time.perf_counter() - tp
-            key = self._group_key(t, r)
-            groups.setdefault(key, []).append((ticket, r, t))
+            if (self.device_bytes is not None
+                    and t.nbytes > self.device_bytes):
+                # Oversized: route around group stacking — stacking would
+                # multiply the resident payload by G, the opposite of what
+                # an over-budget matrix needs.
+                stream_lane.append((ticket, r, t))
+            else:
+                key = self._group_key(t, r)
+                groups.setdefault(key, []).append((ticket, r, t))
 
         results: Dict[int, Tuple[jax.Array, int, int]] = {}
         dispatches = 0
         batched = 0
         ngroups = 0
+        streamed = 0
+        window_disp = 0
         for key, members in groups.items():
             for lo in range(0, len(members), self.max_group):
                 chunk = members[lo:lo + self.max_group]
@@ -188,6 +227,20 @@ class SpmmScheduler:
                 else:
                     self._run_group(key, chunk, results)
                     batched += len(chunk)
+        peak = 0
+        for ticket, r, t in stream_lane:
+            out = eng.spmm_streaming(
+                t, r.b, None if r.c is None else jnp.asarray(r.c),
+                r.alpha, r.beta, device_bytes=self.device_bytes,
+                window_chunk=self.window_chunk)
+            # per-call stats from the plan this exact call ran through —
+            # not the engine's lifetime aggregates
+            pl = eng.last_streaming_plan
+            dispatches += pl.steps + 1         # window steps + epilogue
+            window_disp += pl.steps
+            peak = max(peak, pl.peak_payload_bytes)
+            streamed += 1
+            results[ticket] = (out, r.a.shape[0], r.b.shape[1])
         for out, _, _ in results.values():
             jax.block_until_ready(out)
         wall = time.perf_counter() - t0
@@ -197,11 +250,22 @@ class SpmmScheduler:
         st["groups"] += ngroups
         st["dispatches"] += dispatches
         st["batched_requests"] += batched
+        st["streamed"] += streamed
+        st["window_dispatches"] += window_disp
+        st["peak_payload_bytes"] = max(st["peak_payload_bytes"], peak)
         st["flushes"] += 1
         st["wall_s"] += wall
         st["preprocess_s"] += pack_s
         st["flops"] += float(sum(
             r.a.problem_size_flop(r.b.shape[1]) for _, r in pending))
+        st["last_flush"] = {
+            "requests": len(pending),
+            "groups": ngroups,
+            "dispatches": dispatches,
+            "batched_requests": batched,
+            "streamed": streamed,
+            "window_dispatches": window_disp,
+        }
         return [
             np.asarray(results[ticket][0])[:results[ticket][1],
                                            :results[ticket][2]]
@@ -263,26 +327,37 @@ def serve_spmm_requests(
     *,
     batched: bool = True,
     max_group: int = 64,
+    device_bytes: Optional[int] = None,
+    window_chunk: Optional[int] = None,
 ) -> Tuple[List[np.ndarray], Dict[str, Any]]:
     """Run a pool of SpMM requests; returns results + serving stats.
 
     ``batched=True`` (default) serves through :class:`SpmmScheduler`:
-    bucket-mates are stacked into group dispatches.  ``batched=False``
-    keeps the sequential one-dispatch-per-request loop (baseline).
+    bucket-mates are stacked into group dispatches, and — with
+    ``device_bytes`` set — oversized requests ride the out-of-core
+    streaming lane instead of pinning their full payload on device.
+    ``batched=False`` keeps the sequential one-dispatch-per-request loop
+    (baseline).
 
     Stats report the HFlex executable-cache hit rate, the grouping
-    behaviour (``groups``, ``batched_fraction``, ``dispatches_per_request``)
-    and both ``gflops`` (wall clock including ``pack()`` preprocessing) and
-    ``compute_gflops`` (wall − preprocess — the paper reports execution
-    separately from preprocessing).
+    behaviour (``groups``, ``batched_fraction``, ``dispatches_per_request``),
+    the streaming lane (``streamed``, ``window_dispatches``,
+    ``peak_payload_bytes``) and both ``gflops`` (wall clock including
+    ``pack()`` preprocessing) and ``compute_gflops`` (wall − preprocess —
+    the paper reports execution separately from preprocessing).
     """
     from repro.sparse_api import PLAN_STATS
 
     engine = engine or SextansEngine(tm=128, k0=512, chunk=8, impl="jnp")
     exec0 = PLAN_STATS["exec_misses"]
+    streamed = 0
+    window_dispatches = 0
+    peak_payload = 0
 
     if batched:
-        sched = SpmmScheduler(engine, max_group=max_group)
+        sched = SpmmScheduler(engine, max_group=max_group,
+                              device_bytes=device_bytes,
+                              window_chunk=window_chunk)
         for r in requests:
             sched.submit(r)
         outs = sched.flush()
@@ -292,6 +367,9 @@ def serve_spmm_requests(
         groups = sched.stats["groups"]
         batched_fraction = sched.batched_fraction
         dispatches_per_request = sched.dispatches_per_request
+        streamed = sched.stats["streamed"]
+        window_dispatches = sched.stats["window_dispatches"]
+        peak_payload = sched.stats["peak_payload_bytes"]
     else:
         outs = []
         # perf_counter (monotonic, high-resolution) + block_until_ready: JAX
@@ -299,12 +377,27 @@ def serve_spmm_requests(
         # finishes would time the *enqueue*, not the execution.
         t0 = time.perf_counter()
         pack_s = 0.0
+        dispatches = 0
         for r in requests:
             tp = time.perf_counter()
             packed = engine.pack(r.a)
             pack_s += time.perf_counter() - tp
             c = None if r.c is None else jnp.asarray(r.c)
-            out = engine.spmm(packed, jnp.asarray(r.b), c, r.alpha, r.beta)
+            if device_bytes is not None and packed.nbytes > device_bytes:
+                # the budget binds in the sequential baseline too: an
+                # over-budget payload must never be pinned resident
+                out = engine.spmm_streaming(
+                    packed, r.b, c, r.alpha, r.beta,
+                    device_bytes=device_bytes, window_chunk=window_chunk)
+                pl = engine.last_streaming_plan
+                streamed += 1
+                window_dispatches += pl.steps
+                peak_payload = max(peak_payload, pl.peak_payload_bytes)
+                dispatches += pl.steps + 1
+            else:
+                out = engine.spmm(packed, jnp.asarray(r.b), c,
+                                  r.alpha, r.beta)
+                dispatches += 1
             outs.append(out)
         for out in outs:
             jax.block_until_ready(out)
@@ -313,7 +406,8 @@ def serve_spmm_requests(
         flops = sum(r.a.problem_size_flop(r.b.shape[1]) for r in requests)
         groups = len(requests)
         batched_fraction = 0.0
-        dispatches_per_request = 1.0 if requests else 0.0
+        dispatches_per_request = (dispatches / len(requests)
+                                  if requests else 0.0)
 
     stats = {
         "requests": len(requests),
@@ -324,6 +418,9 @@ def serve_spmm_requests(
         "groups": groups,
         "batched_fraction": batched_fraction,
         "dispatches_per_request": dispatches_per_request,
+        "streamed": streamed,
+        "window_dispatches": window_dispatches,
+        "peak_payload_bytes": peak_payload,
         "executable_cache_hit_rate": engine.stats.hit_rate,
         "cache_misses": engine.stats.cache_misses,
         "plan_executables_compiled": PLAN_STATS["exec_misses"] - exec0,

@@ -22,19 +22,34 @@ Bucket-mates (same slab geometry) batch into ONE dispatch:
 (``A.batch``), ``spmm`` then takes ``b`` of shape ``(G, K, N)``, and
 :func:`plan_group` prepares a single group executable; ``plan(..., mesh=)``
 carries multi-chip shardings on the same abstraction.
+
+Matrices larger than device memory stream: ``plan(..., device_bytes=)``
+returns a :class:`StreamingPlan` that pipelines K0-window chunks through a
+persistent C accumulator (bit-identical to the resident path), and
+:func:`spmm_streaming` is its differentiable twin (per-chunk cotangent
+accumulation).
 """
 
 from .backends import (
     BACKEND_STATS,
     Backend,
+    StreamOps,
     get_backend,
     list_backends,
     register_backend,
     resolve_backend,
     set_auto_policy,
 )
-from .ops import spmm, spmm_raw
-from .plan import PLAN_STATS, SpmmPlan, clear_plan_cache, plan, plan_group
+from .ops import spmm, spmm_raw, spmm_streaming
+from .plan import (
+    PLAN_STATS,
+    SpmmPlan,
+    StreamingPlan,
+    clear_plan_cache,
+    device_memory_budget,
+    plan,
+    plan_group,
+)
 from .tensor import (
     BsrWeight,
     Format,
@@ -56,11 +71,15 @@ __all__ = [
     "BsrWeight",
     "spmm",
     "spmm_raw",
+    "spmm_streaming",
     "plan",
     "plan_group",
     "SpmmPlan",
+    "StreamingPlan",
+    "StreamOps",
     "PLAN_STATS",
     "clear_plan_cache",
+    "device_memory_budget",
     "from_coo",
     "from_dense",
     "from_sparse_matrix",

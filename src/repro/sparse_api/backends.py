@@ -23,6 +23,7 @@ plugs in as (new Format, new backend) without another API fork.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, FrozenSet, List, Optional
 
 import jax
@@ -37,6 +38,8 @@ from .tensor import Format, SparseTensor
 
 __all__ = [
     "Backend",
+    "StreamOps",
+    "stream_finish",
     "register_backend",
     "get_backend",
     "list_backends",
@@ -53,11 +56,51 @@ BACKEND_STATS: Dict[str, int] = {"traces": 0}
 
 
 @dataclasses.dataclass(frozen=True)
+class StreamOps:
+    """Out-of-core K0-window streaming hooks of a backend.
+
+    A streaming execution carries a backend-layout raw f32 accumulator
+    across window-chunk dispatches and applies the alpha/beta epilogue once
+    at the end — the only decomposition that keeps the per-row floating-
+    point add sequence identical to the resident (single-shot) path, hence
+    bit-identical results:
+
+    * ``init(a, n, **opts) -> acc``          — fresh accumulator (backend
+      layout: logical (M, N) for ``jnp``, padded/permuted kernel layout for
+      ``pallas``), always f32.
+    * ``step(a_chunk, b_chunk, acc, **opts) -> acc`` — accumulate one
+      window-chunk (``a_chunk = a.windows(w0, w1)``, ``b_chunk`` the
+      matching rows of ``b``).  Traceable; the chunk payload is the only
+      slab data touched, so it is the unit an out-of-core plan keeps on
+      device.
+    * ``collect(a, acc, n) -> raw``          — accumulator back to the
+      logical (M, N) f32 array (un-permute/slice for kernel layouts).
+
+    The epilogue ``(alpha * raw + beta * c).astype(b.dtype)`` is shared
+    (:func:`stream_finish`), matching both backends' resident epilogues
+    elementwise.
+    """
+
+    init: Callable
+    step: Callable
+    collect: Callable
+
+
+def stream_finish(raw, c, alpha, beta, dtype):
+    """Shared streaming epilogue on the collected raw accumulator —
+    elementwise identical to the resident paths' fused epilogues.
+    ``dtype`` is the dense operand ``b``'s dtype (the resident paths cast
+    the result to it, whatever ``c`` carries)."""
+    return (alpha * raw + beta * c.astype(jnp.float32)).astype(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
 class Backend:
     name: str
     fn: Callable
     formats: FrozenSet[Format]
     description: str = ""
+    stream: Optional[StreamOps] = None
 
 
 _REGISTRY: Dict[str, Backend] = {}
@@ -69,11 +112,14 @@ def register_backend(
     formats=(Format.HFLEX, Format.BSR),
     description: str = "",
     overwrite: bool = False,
+    stream: Optional[StreamOps] = None,
 ) -> Backend:
     """Register an SpMM execution strategy under ``name``.
 
     ``fn(A: SparseTensor, b, c, alpha, beta, **opts) -> jax.Array`` must be
-    traceable (it runs under jit with traced alpha/beta).
+    traceable (it runs under jit with traced alpha/beta).  ``stream``
+    optionally provides the out-of-core K0-window streaming hooks
+    (:class:`StreamOps`); backends without them reject streaming plans.
     """
     if name == "auto":
         raise ValueError("'auto' is reserved; use set_auto_policy to change "
@@ -82,7 +128,7 @@ def register_backend(
         raise ValueError(f"backend {name!r} already registered "
                          f"(pass overwrite=True to replace)")
     be = Backend(name=name, fn=fn, formats=frozenset(formats),
-                 description=description)
+                 description=description, stream=stream)
     _REGISTRY[name] = be
     return be
 
@@ -263,6 +309,77 @@ def _hflex_pallas(a: SparseTensor, b, c, alpha, beta, *, gather, tn, interpret):
     return out[..., :m, :n]
 
 
+# -- out-of-core streaming hooks (K0-window chunk accumulation) -------------
+
+
+def _hflex_jnp_stream_init(a: SparseTensor, n: int, **_unused):
+    return jnp.zeros((a.shape[0], n), jnp.float32)
+
+
+def _hflex_jnp_stream_step(a_chunk: SparseTensor, b_chunk, acc, **_unused):
+    """Scatter-add one window-chunk's contributions into the carried acc.
+
+    ``acc.at[rows].add`` applies the chunk's updates *onto the carried
+    values* in slot order, so chaining chunks reproduces the exact per-row
+    add sequence of the resident path's single ``segment_sum`` over all
+    slots — bit-identical accumulation (a partial-sum-per-chunk scheme
+    would not be: float addition is non-associative).
+    """
+    d = a_chunk.data
+    rows_g, cols_g = _hflex_global_ids(d)
+    contrib = (d.vals.reshape(-1)[:, None].astype(jnp.float32)
+               * b_chunk.astype(jnp.float32)[cols_g])
+    # 'drop' lets a streaming plan pad the tail chunk with inert windows
+    # whose rows point out of bounds; real slots always land in [0, M).
+    return acc.at[rows_g].add(contrib, mode="drop")
+
+
+def _hflex_jnp_stream_collect(a: SparseTensor, acc, n: int, **_unused):
+    return acc
+
+
+def _hflex_pallas_stream_init(a: SparseTensor, n: int, *, tn=128, **_unused):
+    d = a.data
+    npad = cdiv(n, tn) * tn
+    return jnp.zeros((d.mb * d.tm, npad), jnp.float32)
+
+
+def _hflex_pallas_stream_step(a_chunk: SparseTensor, b_chunk, acc, *,
+                              gather="gather", tn=128, interpret=None,
+                              **_unused):
+    """One accumulate-mode kernel launch over the chunk's NW grid.
+
+    The carried acc stays in kernel layout (padded rows, interleave
+    permutation) between dispatches; the kernel seeds its VMEM scratch from
+    it and emits the raw f32 accumulator — the same add sequence a full-NW
+    launch performs, split at chunk boundaries.
+    """
+    d = a_chunk.data
+    npad = acc.shape[-1]
+    kc, nc = b_chunk.shape
+    bp = jnp.pad(b_chunk, ((0, d.nw * d.k0 - kc), (0, npad - nc)))
+    return sextans_spmm_pallas(
+        d.vals, d.cols, d.rows, d.q, bp, acc,
+        tm=d.tm, k0=d.k0, chunk=d.chunk, tn=tn, gather=gather,
+        interpret=interpret, accumulate=True,
+    )
+
+
+def _hflex_pallas_stream_collect(a: SparseTensor, acc, n: int, **_unused):
+    d = a.data
+    if d.interleaved:
+        acc = _permute_rows_inv(acc, d.mb, d.tm)
+    return acc[..., :a.shape[0], :n]
+
+
+_JNP_STREAM = StreamOps(init=_hflex_jnp_stream_init,
+                        step=_hflex_jnp_stream_step,
+                        collect=_hflex_jnp_stream_collect)
+_PALLAS_STREAM = StreamOps(init=_hflex_pallas_stream_init,
+                           step=_hflex_pallas_stream_step,
+                           collect=_hflex_pallas_stream_collect)
+
+
 def _bsr_raw_jnp(a: SparseTensor, b):
     """A @ b for BSR: (b^T @ A^T)^T on the stored transposed-weight layout."""
     w = a.data
@@ -319,12 +436,18 @@ def _backend_pallas_onehot(a, b, c, alpha, beta, *, tn=128, interpret=None,
 register_backend(
     "pallas", _backend_pallas,
     formats=(Format.HFLEX, Format.BSR),
-    description="Sextans streaming kernel / BSR tile kernel (row-gather)")
+    description="Sextans streaming kernel / BSR tile kernel (row-gather)",
+    stream=_PALLAS_STREAM)
 register_backend(
     "pallas_onehot", _backend_pallas_onehot,
     formats=(Format.HFLEX,),
-    description="Sextans kernel, pure-MXU one-hot gather")
+    description="Sextans kernel, pure-MXU one-hot gather",
+    stream=StreamOps(
+        init=_hflex_pallas_stream_init,
+        step=functools.partial(_hflex_pallas_stream_step, gather="onehot"),
+        collect=_hflex_pallas_stream_collect))
 register_backend(
     "jnp", _backend_jnp,
     formats=(Format.HFLEX, Format.BSR),
-    description="XLA segment-sum/einsum path (CPU production + autodiff ref)")
+    description="XLA segment-sum/einsum path (CPU production + autodiff ref)",
+    stream=_JNP_STREAM)

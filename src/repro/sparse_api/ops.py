@@ -33,7 +33,7 @@ import numpy as np
 from . import backends as _bk
 from .tensor import Format, SparseTensor
 
-__all__ = ["spmm", "spmm_raw"]
+__all__ = ["spmm", "spmm_raw", "spmm_streaming"]
 
 
 def _raw_reference(a: SparseTensor, b: jax.Array) -> jax.Array:
@@ -117,6 +117,147 @@ def spmm_raw(backend_name: str, a: SparseTensor, b, c, alpha, beta, **opts):
     return _spmm_core(backend_name, okey, a, b, c,
                       jnp.asarray(alpha, jnp.float32),
                       jnp.asarray(beta, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core streaming (differentiable)
+# ---------------------------------------------------------------------------
+
+
+def _stream_bounds(nw: int, wchunk: int):
+    return [(w0, min(nw, w0 + wchunk)) for w0 in range(0, nw, wchunk)]
+
+
+def _stream_raw(name, okey, wchunk, a, b):
+    """Raw accumulated ``A @ b`` (logical (M, N) f32) via the backend's
+    window-chunk streaming hooks — the exact add sequence of the resident
+    path, split at chunk boundaries (see backends.StreamOps)."""
+    stream = _bk.get_backend(name).stream
+    opts = dict(okey)
+    d = a.data
+    acc = stream.init(a, b.shape[-1], **opts)
+    for w0, w1 in _stream_bounds(d.nw, wchunk):
+        a_w = a.windows(w0, w1)
+        b_w = jax.lax.slice_in_dim(b, w0 * d.k0, w0 * d.k0 + a_w.k, axis=0)
+        acc = stream.step(a_w, b_w, acc, **opts)
+    return stream.collect(a, acc, b.shape[-1], **opts)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
+def _stream_core(name, okey, wchunk, a, b, c, alpha, beta):
+    raw = _stream_raw(name, okey, wchunk, a, b)
+    return _bk.stream_finish(raw, c, alpha, beta, b.dtype)
+
+
+def _stream_fwd(name, okey, wchunk, a, b, c, alpha, beta):
+    raw = _stream_raw(name, okey, wchunk, a, b)
+    out = _bk.stream_finish(raw, c, alpha, beta, b.dtype)
+    return out, (a, b, c, alpha, beta, raw)
+
+
+def _stream_bwd(name, okey, wchunk, res, g):
+    """Per-chunk cotangent accumulation: the backward pass walks the same
+    K0-window chunks as the forward, so at no point does it need more than
+    one chunk's slab payload / ``b`` rows in flight — streaming stays
+    differentiable without resurrecting the resident working set.  Each
+    chunk's ``d vals`` is masked by its own true counts (``nse`` rides the
+    window slice), exactly like the single-shot VJP."""
+    a, b, c, alpha, beta, raw = res
+    g32 = g.astype(jnp.float32)
+    ct = alpha * g32
+    d = a.data
+    dvals_chunks = []
+    db_chunks = []
+    for w0, w1 in _stream_bounds(d.nw, wchunk):
+        a_w = a.windows(w0, w1)
+        b_w = jax.lax.slice_in_dim(b, w0 * d.k0, w0 * d.k0 + a_w.k, axis=0)
+
+        def raw_fn(vals, b_, a_w=a_w):
+            return _raw_reference(a_w.with_values(vals), b_)
+
+        _, vjp = jax.vjp(raw_fn, a_w.values, b_w)
+        dv, db_w = vjp(ct)
+        d_w = a_w.data
+        valid = (jax.lax.broadcasted_iota(jnp.int32, d_w.vals.shape,
+                                          d_w.vals.ndim - 1)
+                 < d_w.nse[..., None])
+        dvals_chunks.append(jnp.where(valid, dv, 0))
+        db_chunks.append(db_w)
+    dvals = jnp.concatenate(dvals_chunks, axis=-2)
+    db = jnp.concatenate(db_chunks, axis=0).astype(b.dtype)
+    dc = (beta * g32).astype(c.dtype)
+    dalpha = jnp.sum(g32 * raw).astype(alpha.dtype)
+    dbeta = jnp.sum(g32 * c.astype(jnp.float32)).astype(beta.dtype)
+    da = jax.tree.map(_float0_zeros, a).with_values(
+        dvals.astype(a.values.dtype))
+    return (da, db, dc, dalpha, dbeta)
+
+
+_stream_core.defvjp(_stream_fwd, _stream_bwd)
+
+_stream_jit = jax.jit(_stream_core, static_argnums=(0, 1, 2))
+
+
+def spmm_streaming(
+    a: SparseTensor,
+    b,
+    c=None,
+    alpha=1.0,
+    beta=0.0,
+    *,
+    window_chunk: int = 1,
+    backend: str = "auto",
+    **opts,
+) -> jax.Array:
+    """``alpha * A @ b + beta * c`` executed as a K0-window-chunk stream.
+
+    The differentiable twin of :class:`repro.sparse_api.StreamingPlan`:
+    the matrix is consumed ``window_chunk`` K0-windows at a time against a
+    carried f32 accumulator, with the epilogue applied once at the end —
+    results are **bit-identical** to :func:`spmm` on the same backend for
+    every chunk size, and the custom VJP walks the same chunks,
+    accumulating cotangents chunk by chunk (see ``_stream_bwd``).
+
+    Scope: this bounds the per-chunk *intermediates* (the window's B rows
+    in flight, the contribution scatter, each chunk's cotangent) — ``a``,
+    ``b`` and the saved residuals are still whole-array jit operands, and
+    the trace unrolls ``ceil(NW / window_chunk)`` chunk bodies.  For
+    matrices that genuinely exceed device memory use :func:`plan` with
+    ``device_bytes=`` (host-side payload staging, one compiled window-step
+    executable); this entry point is for *training* with windowed-execution
+    semantics and for pinning the streaming tier's bit-identity.
+
+    Unbatched ``Format.HFLEX`` only; ``backend`` must provide streaming
+    hooks (all built-in HFLEX backends do).
+    """
+    if not isinstance(a, SparseTensor):
+        raise TypeError(
+            f"spmm_streaming expects a SparseTensor, got {type(a).__name__}")
+    if a.format is not Format.HFLEX:
+        raise ValueError("spmm_streaming supports Format.HFLEX only")
+    if a.batch is not None:
+        raise ValueError("spmm_streaming takes one matrix at a time")
+    b = jnp.asarray(b)
+    m, k = a.shape
+    if b.ndim != 2:
+        raise ValueError(f"b must be 2-D (K, N), got shape {b.shape}")
+    if b.shape[0] != k:
+        raise ValueError(f"B rows {b.shape[0]} != A cols {k}")
+    wchunk = int(window_chunk)
+    if not 1 <= wchunk <= a.data.nw:
+        raise ValueError(
+            f"window_chunk must be in [1, NW={a.data.nw}], got {wchunk}")
+    cshape = (m, b.shape[1])
+    c_ = jnp.zeros(cshape, b.dtype) if c is None else jnp.asarray(c)
+    if c_.shape != cshape:
+        raise ValueError(f"c must have shape {cshape}, got {c_.shape}")
+    name = _bk.resolve_backend(backend, a, b)
+    if _bk.get_backend(name).stream is None:
+        raise ValueError(f"backend {name!r} has no streaming hooks")
+    okey = tuple(sorted(opts.items()))
+    return _stream_jit(name, okey, wchunk, a, b, c_,
+                       jnp.asarray(alpha, jnp.float32),
+                       jnp.asarray(beta, jnp.float32))
 
 
 def spmm(

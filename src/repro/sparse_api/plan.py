@@ -41,12 +41,27 @@ is AOT-compiled with the engine's multi-chip shardings (A row-blocks over
 ``SextansEngine.shard_specs``), so the sharded multi-chip path and the
 batched serving path run through one plan abstraction.
 
+**Streaming plans** (:class:`StreamingPlan`, selected by
+``plan(..., device_bytes=)`` or forced with ``stream=True``) are the
+out-of-core tier: a matrix whose slab payload exceeds the device budget is
+held host-side and executed as a pipeline of K0-*window-chunk* dispatches
+— ONE window-step executable of bucketed shape ``(MB, WCHUNK, LW)``
+accumulates ``A_w @ B_w`` into a persistent (donated) f32 C-accumulator
+while the next chunk's host→device transfer is staged, and the
+``alpha``/``beta`` epilogue is applied once at the end.  Results are
+bit-identical to the resident path (see ``backends.StreamOps``).  This is
+the paper's BRAM K-window lifted to the host→device boundary: device
+memory bounds the *chunk*, not the matrix.
+
 Plans are a forward/serving construct: ``run`` calls an AOT-compiled
-executable and is not differentiable — training goes through ``spmm``.
+executable and is not differentiable — training goes through ``spmm`` (or
+``spmm_streaming`` for out-of-core training steps).
 """
 
 from __future__ import annotations
 
+import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
 import jax
@@ -54,18 +69,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.hflex import bucket_geometry
+from repro.core.partition import cdiv
 
 from . import backends as _bk
 from .tensor import Format, PackedSpMM, SparseTensor, stack_hflex
 
-__all__ = ["SpmmPlan", "plan", "plan_group", "clear_plan_cache",
-           "PLAN_STATS"]
+__all__ = ["SpmmPlan", "StreamingPlan", "plan", "plan_group",
+           "clear_plan_cache", "device_memory_budget", "PLAN_STATS"]
 
 # Executable-cache hits/misses (the paper counts avoided place/route runs;
 # we count avoided traces+compiles) and compiled-call dispatches (the
 # batched scheduler's amortization target: dispatches << requests).
+# ``window_dispatches`` counts the streaming tier's per-chunk dispatches
+# separately (they are deliberate pipeline steps, not missed batching).
 PLAN_STATS: Dict[str, int] = {"exec_hits": 0, "exec_misses": 0,
-                              "dispatches": 0}
+                              "dispatches": 0, "window_dispatches": 0}
 
 _EXEC_CACHE: Dict[Tuple, Any] = {}
 
@@ -76,21 +94,74 @@ def clear_plan_cache() -> None:
 
 
 def _aot_compile(key: Tuple, fn, arg_shapes, in_shardings=None,
-                 out_shardings=None):
+                 out_shardings=None, donate_argnums=None):
     """Lower + compile ``fn`` for ``arg_shapes`` once per cache key."""
     hit = _EXEC_CACHE.get(key)
     if hit is not None:
         PLAN_STATS["exec_hits"] += 1
         return hit
     PLAN_STATS["exec_misses"] += 1
+    kw = {}
+    if donate_argnums is not None:
+        kw["donate_argnums"] = donate_argnums
     if in_shardings is None:
-        jfn = jax.jit(fn)
+        jfn = jax.jit(fn, **kw)
     else:
         jfn = jax.jit(fn, in_shardings=in_shardings,
-                      out_shardings=out_shardings)
+                      out_shardings=out_shardings, **kw)
     compiled = jfn.lower(*arg_shapes).compile()
     _EXEC_CACHE[key] = compiled
     return compiled
+
+
+def device_memory_budget() -> Optional[int]:
+    """Best-effort device memory budget in bytes (None if unknown).
+
+    Uses the default device's ``memory_stats()['bytes_limit']`` where the
+    backend reports it (TPU/GPU); CPU backends report nothing, so
+    ``plan(..., device_bytes="auto")`` stays resident there.
+    """
+    try:
+        dev = jax.local_devices()[0]
+        stats = dev.memory_stats()
+        if stats:
+            limit = int(stats.get("bytes_limit", 0))
+            return limit or None
+    except Exception:
+        pass
+    return None
+
+
+def _per_window_bytes(d, n: int, itemsize: int) -> int:
+    """Device bytes one K0 window contributes to a streamed chunk: the
+    vals/cols/rows slab columns (4 B each), its ``q`` column, the staged
+    ``(K0, N)`` rows of ``b`` plus one in-step copy of them (the jnp path
+    gathers them, the Pallas path pads them), and the per-slot contribution
+    intermediate ``(MB*LW, N)`` f32 the scatter/one-hot accumulate
+    materializes — without it the dominant step allocation would be
+    invisible to both window-chunk sizing and the reported chunk/peak byte
+    stats.  Single source of truth for both."""
+    return (d.mb * d.lw * 12 + d.mb * 4
+            + 2 * d.k0 * n * itemsize
+            + d.mb * d.lw * n * 4)
+
+
+def _ab_operands(cache: Dict, alpha, beta) -> Tuple[Any, Any]:
+    """Device buffers for the epilogue scalars, cached per value so hot
+    loops never re-commit host scalars (traced/non-scalar inputs convert
+    directly)."""
+    try:
+        key = (float(alpha), float(beta))
+        cached = cache.get(key)
+        if cached is None:
+            cached = (jnp.asarray(alpha, jnp.float32),
+                      jnp.asarray(beta, jnp.float32))
+            if len(cache) < 256:
+                cache[key] = cached
+        return cached
+    except TypeError:           # traced / non-scalar: convert directly
+        return (jnp.asarray(alpha, jnp.float32),
+                jnp.asarray(beta, jnp.float32))
 
 
 class SpmmPlan:
@@ -240,6 +311,13 @@ class SpmmPlan:
             nd(lift(specs["b"])), nd(lift(specs["c"])), nd(P()), nd(P()))
         return in_sh, nd(lift(specs["c"]))
 
+    @property
+    def payload_bytes(self) -> int:
+        """Bytes of the packed operand payload this plan keeps device-
+        resident between runs (the quantity a ``device_bytes`` streaming
+        threshold compares against)."""
+        return int(sum(x.nbytes for x in self._operands))
+
     # -- execution ----------------------------------------------------------
 
     def run(self, b, c=None, alpha=1.0, beta=0.0, *, values=None) -> jax.Array:
@@ -261,19 +339,10 @@ class SpmmPlan:
                 self._zero_c = jnp.zeros(self._cshape, self.dtype)
             c = self._zero_c
         else:
-            c = jnp.asarray(c)
-        try:
-            ab_key = (float(alpha), float(beta))
-            cached = self._ab_cache.get(ab_key)
-            if cached is None:
-                cached = (jnp.asarray(alpha, jnp.float32),
-                          jnp.asarray(beta, jnp.float32))
-                if len(self._ab_cache) < 256:
-                    self._ab_cache[ab_key] = cached
-            alpha, beta = cached
-        except TypeError:       # traced / non-scalar: convert directly
-            alpha = jnp.asarray(alpha, jnp.float32)
-            beta = jnp.asarray(beta, jnp.float32)
+            # cast to the planned dtype: the executable was compiled for
+            # it, and the batched scheduler casts mismatched c the same way
+            c = jnp.asarray(c, self.dtype)
+        alpha, beta = _ab_operands(self._ab_cache, alpha, beta)
         ops = self._operands
         if values is not None:
             values = jnp.asarray(values)
@@ -296,6 +365,282 @@ class SpmmPlan:
                 f"{mtag})")
 
 
+class StreamingPlan:
+    """Out-of-core SpMM: K0-window chunks stream through a persistent C
+    accumulator — for matrices whose slab payload exceeds device memory.
+
+    Built via ``plan(..., device_bytes=)`` / ``plan(..., stream=True)``.
+    The full HFLEX payload is staged **host-side**; each of the
+    ``steps = ceil(NW / window_chunk)`` dispatches receives only a
+    ``(MB, WCHUNK, LW)`` slab chunk plus the matching ``(WCHUNK*K0, N)``
+    rows of ``b``, accumulated into a donated f32 C block by ONE
+    AOT-compiled window-step executable (the chunk after the one in flight
+    is staged while the device computes — JAX async dispatch gives the
+    transfer/compute overlap as long as ``run`` never blocks).  ``beta*c``
+    is folded in exactly once by the final epilogue dispatch, so results
+    are bit-identical to the resident :class:`SpmmPlan` / unplanned
+    ``spmm`` (see ``backends.StreamOps`` for why the raw-accumulator
+    decomposition is the only bit-exact one).
+
+    Attributes of note: ``window_chunk`` (K0 windows per dispatch, bucketed
+    to a power of two so bucket-mates share the step executable),
+    ``steps`` / ``window_dispatches`` (chunk dispatches per run),
+    ``payload_bytes`` (full host payload), ``chunk_payload_bytes`` and
+    ``peak_payload_bytes`` (device working set: two staged chunks + the
+    accumulator + epilogue operands).
+    """
+
+    group = None
+    mesh = None
+
+    def __init__(self, a: SparseTensor, n: int, backend: str,
+                 opts: Dict[str, Any], dtype=jnp.float32,
+                 device_bytes: Optional[int] = None,
+                 window_chunk: Optional[int] = None):
+        if not isinstance(a, SparseTensor):
+            raise TypeError(
+                f"plan expects a SparseTensor, got {type(a).__name__}")
+        if a.format is not Format.HFLEX:
+            raise ValueError("streaming plans support Format.HFLEX only")
+        if a.batch is not None:
+            raise ValueError(
+                "streaming plans take one matrix at a time (the serving "
+                "scheduler routes oversized requests around group stacking)")
+        if n <= 0:
+            raise ValueError("n must be positive")
+        self.a = a
+        self.n = int(n)
+        self.m, self.k = a.shape
+        self.backend = _bk.resolve_backend(backend, a)
+        stream = _bk.get_backend(self.backend).stream
+        if stream is None:
+            raise ValueError(
+                f"backend {self.backend!r} has no streaming hooks "
+                f"(StreamOps); register it with stream= to use it out of "
+                f"core")
+        self._stream = stream
+        self.opts = dict(opts)
+        self.dtype = jnp.dtype(dtype)
+        self.device_bytes = device_bytes
+        okey = tuple(sorted(self.opts.items()))
+
+        d = a.data
+        # Host staging: the out-of-core contract — the full payload lives in
+        # host memory (near-zero-copy from CPU jax arrays), and only
+        # chunk-sized buffers are ever device_put.  The plan then drops
+        # every reference to the caller's device arrays (self.a is rebuilt
+        # over the host copies), so it pins no device payload of its own;
+        # on an accelerator the caller can delete the packed tensor after
+        # planning to actually free it (pack() itself still commits the
+        # payload to the default device first — host-resident packing is a
+        # ROADMAP item).
+        self._vals_h = np.asarray(d.vals)
+        self._cols_h = np.asarray(d.cols)
+        self._rows_h = np.asarray(d.rows)
+        self._q_h = np.asarray(d.q)
+        d = dataclasses.replace(d, vals=self._vals_h, cols=self._cols_h,
+                                rows=self._rows_h, q=self._q_h,
+                                nse=np.asarray(d.nse))
+        self.a = a = SparseTensor(data=d, format=a.format, shape=a.shape,
+                                  nse=a.nse)
+        self._d = d
+
+        acc_shape = tuple(jax.eval_shape(
+            lambda: stream.init(a, self.n, **self.opts)).shape)
+        self._acc_shape = acc_shape
+        acc_bytes = int(np.prod(acc_shape)) * 4
+        out_bytes = 2 * self.m * self.n * self.dtype.itemsize  # c + out
+        if window_chunk is not None:
+            wc = int(window_chunk)
+            if not 1 <= wc <= d.nw:
+                raise ValueError(
+                    f"window_chunk must be in [1, NW={d.nw}], got {wc}")
+        else:
+            wc = self._choose_window_chunk(device_bytes, acc_bytes,
+                                           out_bytes)
+        self.window_chunk = wc
+        self.steps = cdiv(d.nw, wc)
+        self.chunk_payload_bytes = wc * _per_window_bytes(
+            d, self.n, self.dtype.itemsize)
+        # double-buffered: chunk i computing + chunk i+1 staged
+        self.peak_payload_bytes = (2 * self.chunk_payload_bytes
+                                   + acc_bytes + out_bytes)
+        if (device_bytes is not None
+                and self.peak_payload_bytes > device_bytes):
+            # window_chunk=1 is the floor: the accumulator + epilogue
+            # operands + one double-buffered window are irreducible.  On a
+            # real device this overrun is the OOM the budget was meant to
+            # prevent — surface it instead of failing silently later.
+            warnings.warn(
+                f"streaming working set ({self.peak_payload_bytes} B: "
+                f"2x{self.chunk_payload_bytes} B chunks + {acc_bytes} B "
+                f"accumulator + {out_bytes} B epilogue operands) exceeds "
+                f"device_bytes={device_bytes}; window_chunk="
+                f"{self.window_chunk} is already the floor for this "
+                f"(M, N) — raise the budget or shrink N",
+                stacklevel=3)
+
+        # ONE window-step executable: bucketed (MB, WCHUNK, LW) chunk shape
+        # shared by every bucket-mate (the HFlex property, kept under
+        # streaming).  k of the chunk is the constant WCHUNK*K0; the
+        # parent's ragged K only affects host-side slicing.
+        m, k0 = self.m, d.k0
+        kc = wc * k0
+        interleaved, tm, chunk_sz = d.interleaved, d.tm, d.chunk
+        opts_d = self.opts
+
+        def traced_step(vals, cols, rows, q, b_chunk, acc):
+            dd = PackedSpMM(vals=vals, cols=cols, rows=rows, q=q, nse=q,
+                            m=m, k=kc, tm=tm, k0=k0, chunk=chunk_sz,
+                            interleaved=interleaved, nnz=0)
+            a_c = SparseTensor(data=dd, format=Format.HFLEX, shape=(m, kc))
+            return stream.step(a_c, b_chunk, acc, **opts_d)
+
+        a_struct = self.a      # statics only inside collect (no leaves read)
+
+        out_dtype = self.dtype
+
+        def traced_finish(acc, c, alpha, beta):
+            raw = stream.collect(a_struct, acc, self.n, **opts_d)
+            return _bk.stream_finish(raw, c, alpha, beta, out_dtype)
+
+        geom = (d.mb, wc, d.lw, tm, k0, chunk_sz, interleaved)
+        self.exec_key = ("stream-step", self.backend, okey, geom, m, self.n,
+                         str(self.dtype))
+        sd = jax.ShapeDtypeStruct
+        chunk_shapes = (
+            sd((d.mb, wc, d.lw), jnp.float32),      # vals
+            sd((d.mb, wc, d.lw), jnp.int32),        # cols
+            sd((d.mb, wc, d.lw), jnp.int32),        # rows
+            sd((d.mb, wc), jnp.int32),              # q
+            sd((kc, self.n), self.dtype),           # b chunk
+            sd(acc_shape, jnp.float32),             # carried accumulator
+        )
+        # The accumulator is donated: the persistent C block is updated in
+        # place across window dispatches (on backends that honor donation).
+        self._step_exec = _aot_compile(self.exec_key, traced_step,
+                                       chunk_shapes, donate_argnums=(5,))
+        fin_key = ("stream-finish", self.backend, okey, geom, m, self.n,
+                   str(self.dtype))
+        fin_shapes = (sd(acc_shape, jnp.float32),
+                      sd((m, self.n), self.dtype),
+                      sd((), jnp.float32), sd((), jnp.float32))
+        self._finish_exec = _aot_compile(fin_key, traced_finish, fin_shapes)
+        self._zero_c: Optional[jax.Array] = None
+        self._ab_cache: Dict[Tuple[float, float], Tuple[Any, Any]] = {}
+
+    # -- sizing --------------------------------------------------------------
+
+    def _choose_window_chunk(self, device_bytes, acc_bytes, out_bytes) -> int:
+        """Largest power-of-two window count whose double-buffered working
+        set fits the budget (>= 1 — below that the problem cannot run at
+        all); no budget means the finest (MB, 1, LW) granularity."""
+        d = self._d
+        if device_bytes is None:
+            return 1
+        per_w = _per_window_bytes(d, self.n, self.dtype.itemsize)
+        avail = max(int(device_bytes) - acc_bytes - out_bytes, 0) // 2
+        wc = max(1, avail // per_w)
+        wc = 1 << (int(wc).bit_length() - 1)          # pow2 bucket
+        return min(wc, d.nw)
+
+    @property
+    def payload_bytes(self) -> int:
+        """Full packed payload bytes (held host-side; what a resident plan
+        would pin on device)."""
+        return self.a.nbytes
+
+    @property
+    def window_dispatches(self) -> int:
+        """Window-chunk dispatches per run (excludes the epilogue)."""
+        return self.steps
+
+    # -- execution -----------------------------------------------------------
+
+    def _stage_chunk(self, i: int, b_h: np.ndarray, vals_h: np.ndarray):
+        """Slice + pad chunk ``i`` on the host and start its transfer."""
+        d = self._d
+        wc, k0, nw = self.window_chunk, d.k0, d.nw
+        w0 = i * wc
+        w1 = min(nw, w0 + wc)
+        pad = wc - (w1 - w0)
+        vals_c = vals_h[:, w0:w1]
+        cols_c = self._cols_h[:, w0:w1]
+        rows_c = self._rows_h[:, w0:w1]
+        q_c = self._q_h[:, w0:w1]
+        if pad:
+            # Tail chunk: pad with inert windows — q=0 skips them in the
+            # kernel, and rows=MB*TM maps their slots out of [0, M) in BOTH
+            # row layouts (interleaved: r*MB + bi >= MB*TM >= M;
+            # block-major: bi*TM + r >= MB*TM >= M), so the jnp scatter
+            # drops them.  Bit-identity is unconditional (the padded
+            # windows contribute no adds at all).
+            wpad = ((0, 0), (0, pad), (0, 0))
+            vals_c = np.pad(vals_c, wpad)
+            cols_c = np.pad(cols_c, wpad)
+            rows_c = np.pad(rows_c, wpad, constant_values=d.mb * d.tm)
+            q_c = np.pad(q_c, ((0, 0), (0, pad)))
+        kb0 = w0 * k0
+        kb1 = min(self.k, kb0 + wc * k0)
+        b_c = b_h[kb0:kb1]
+        if b_c.shape[0] < wc * k0:
+            b_c = np.pad(b_c, ((0, wc * k0 - b_c.shape[0]), (0, 0)))
+        return tuple(jax.device_put(x)
+                     for x in (vals_c, cols_c, rows_c, q_c, b_c))
+
+    def run(self, b, c=None, alpha=1.0, beta=0.0, *, values=None) -> jax.Array:
+        """Stream the SpMM: ``steps`` window dispatches + one epilogue.
+
+        ``b`` is ``(K, N)`` of the planned dtype — a host (numpy) array by
+        preference: only chunk-sized slices are transferred.  ``values``
+        substitutes a new non-zero payload of the packed structure (sliced
+        host-side per chunk).  The loop never blocks on device results, so
+        chunk i+1's transfer overlaps chunk i's compute.
+        """
+        b_h = np.asarray(b)
+        if b_h.shape != (self.k, self.n) or b_h.dtype != self.dtype:
+            raise ValueError(
+                f"plan expects b of shape {(self.k, self.n)} dtype "
+                f"{self.dtype}, got {b_h.shape} {b_h.dtype}")
+        vals_h = self._vals_h
+        if values is not None:
+            vals_h = np.asarray(values)
+            if vals_h.shape != self._vals_h.shape:
+                raise ValueError(
+                    f"values must have the packed shape "
+                    f"{self._vals_h.shape}, got {vals_h.shape}")
+        if c is None:
+            if self._zero_c is None:
+                self._zero_c = jnp.zeros((self.m, self.n), self.dtype)
+            c = self._zero_c
+        else:
+            # cast to the planned dtype (the AOT executable's signature) —
+            # the same treatment the batched scheduler gives mismatched c
+            c = jnp.asarray(c, self.dtype)
+            if c.shape != (self.m, self.n):
+                raise ValueError(f"c must have shape {(self.m, self.n)}, "
+                                 f"got {c.shape}")
+        alpha, beta = _ab_operands(self._ab_cache, alpha, beta)
+        acc = jnp.zeros(self._acc_shape, jnp.float32)
+        nxt = self._stage_chunk(0, b_h, vals_h)
+        for i in range(self.steps):
+            ops = nxt
+            acc = self._step_exec(*ops, acc)       # async dispatch
+            if i + 1 < self.steps:                 # stage while it computes
+                nxt = self._stage_chunk(i + 1, b_h, vals_h)
+        PLAN_STATS["dispatches"] += self.steps + 1
+        PLAN_STATS["window_dispatches"] += self.steps
+        return self._finish_exec(acc, c, alpha, beta)
+
+    def __call__(self, b, c=None, alpha=1.0, beta=0.0, **kw) -> jax.Array:
+        return self.run(b, c, alpha, beta, **kw)
+
+    def __repr__(self) -> str:
+        return (f"StreamingPlan(shape=({self.m}, {self.k})@{self.n}, "
+                f"backend={self.backend!r}, window_chunk="
+                f"{self.window_chunk}, steps={self.steps})")
+
+
 def plan(
     a: SparseTensor,
     n: int,
@@ -303,8 +648,11 @@ def plan(
     backend: str = "auto",
     dtype=jnp.float32,
     mesh=None,
+    device_bytes: Union[int, str, None] = None,
+    stream: Optional[bool] = None,
+    window_chunk: Optional[int] = None,
     **opts,
-) -> SpmmPlan:
+) -> Union[SpmmPlan, "StreamingPlan"]:
     """Prepare ``alpha * A @ b + beta * c`` for dense operands of width ``n``.
 
     Performs padding/permutation precompute, backend resolution and
@@ -316,7 +664,37 @@ def plan(
     shardings (see :meth:`SpmmPlan._mesh_shardings`); a *group* plan can
     carry a mesh too, unifying the sharded and batched serving paths.
     ``a`` may be batched (``a.batch == G``) — or use :func:`plan_group`.
+
+    ``device_bytes`` (an int budget, or ``"auto"`` to read the backend's
+    reported memory limit) selects the out-of-core tier: when the resident
+    working set — packed payload + ``b`` + ``c`` + output — exceeds the
+    budget, a :class:`StreamingPlan` is returned, which streams K0-window
+    chunks through a persistent C accumulator instead of pinning the slabs
+    on device.  ``stream=True``/``False`` forces the choice;
+    ``window_chunk`` pins the windows-per-dispatch (otherwise sized from
+    the budget).  Streaming requires an unbatched HFLEX matrix without a
+    mesh — oversized batched/mesh plans raise rather than silently pinning
+    more memory than the device has.
     """
+    budget: Optional[int] = None
+    if device_bytes is not None:
+        budget = (device_memory_budget() if device_bytes == "auto"
+                  else int(device_bytes))
+    if stream is None:
+        stream = False
+        if budget is not None:
+            itemsize = jnp.dtype(dtype).itemsize
+            m, k = a.shape
+            working = a.nbytes + (k * n + 2 * m * n) * itemsize
+            stream = working > budget
+    if stream:
+        if mesh is not None:
+            raise ValueError(
+                "streaming plans cannot carry a mesh; shard rows across "
+                "chips first, then stream each shard (device_bytes applies "
+                "per chip)")
+        return StreamingPlan(a, n, backend, opts, dtype=dtype,
+                             device_bytes=budget, window_chunk=window_chunk)
     return SpmmPlan(a, n, backend, opts, dtype=dtype, mesh=mesh)
 
 

@@ -271,6 +271,18 @@ class SparseTensor:
         return (d.blocks.shape[0], d.k, d.f, d.tk, d.tf)
 
     @property
+    def nbytes(self) -> int:
+        """Total bytes of the packed device payload (every array leaf).
+
+        This is what the out-of-core streaming threshold compares against a
+        device-memory budget: a matrix whose ``nbytes`` exceeds the budget
+        cannot be resident and must stream K0-window chunks instead
+        (``plan(..., device_bytes=)``).
+        """
+        leaves = jax.tree_util.tree_leaves(self.data)
+        return int(sum(x.nbytes for x in leaves))
+
+    @property
     def values(self) -> jax.Array:
         """The differentiable non-zero payload (vals slab / BSR blocks)."""
         return self.data.vals if self.format is Format.HFLEX else self.data.blocks
@@ -306,6 +318,61 @@ class SparseTensor:
         if gsz is None:
             raise TypeError("unstack requires a batched (stacked) tensor")
         return tuple(self[g] for g in range(gsz))
+
+    # -- K0-window structure (out-of-core streaming) -------------------------
+
+    @property
+    def num_windows(self) -> int:
+        """Number of K0 windows along K (the slab NW axis)."""
+        if self.format is not Format.HFLEX:
+            raise TypeError("num_windows requires Format.HFLEX")
+        return self.data.nw
+
+    def windows(self, w0: int, w1: int) -> "SparseTensor":
+        """The sub-matrix covering K0-windows ``[w0, w1)`` as a
+        self-describing SparseTensor.
+
+        The result holds the ``(MB, w1-w0, LW)`` sub-payload (leading group
+        axes pass through) with per-window ``q``/``nse`` sliced along, and
+        logical shape ``(M, min(K, w1*K0) - w0*K0)`` — i.e. column block
+        ``[w0*K0, w1*K0)`` of ``A``, re-based to column 0.  Because slab
+        ``cols`` are window-local, no index arithmetic is touched: the slice
+        is a view over the window axis, and
+        ``A.windows(w0, w1) @ b[w0*K0 : w1*K0]`` is exactly those windows'
+        contribution to ``A @ b``.  This is the paper's BRAM K-window lifted
+        to the host→device boundary: the unit an out-of-core plan streams.
+
+        Slices of a stacked (batched) tensor keep the group axis and the
+        per-member ``nse``, so they remain ``unstack``-compatible.  Works on
+        traced payloads (inside jit/grad; ``nnz`` then falls back to the
+        parent's static count).
+        """
+        if self.format is not Format.HFLEX:
+            raise TypeError("windows() requires Format.HFLEX")
+        d = self.data
+        nw = d.nw
+        w0, w1 = int(w0), int(w1)
+        if not 0 <= w0 < w1 <= nw:
+            raise ValueError(f"window slice [{w0}, {w1}) out of range for "
+                             f"NW={nw}")
+        nse_w = d.nse[..., :, w0:w1]
+        if isinstance(nse_w, jax.core.Tracer):
+            nnz_w = d.nnz                      # static upper bound under trace
+        else:
+            nnz_w = int(np.asarray(nse_w).sum())
+        k_w = min(self.k, w1 * d.k0) - w0 * d.k0
+        data_w = dataclasses.replace(
+            d,
+            vals=d.vals[..., :, w0:w1, :],
+            cols=d.cols[..., :, w0:w1, :],
+            rows=d.rows[..., :, w0:w1, :],
+            q=d.q[..., :, w0:w1],
+            nse=nse_w,
+            k=k_w,
+            nnz=nnz_w,
+        )
+        return SparseTensor(data=data_w, format=self.format,
+                            shape=(self.m, k_w))
 
     # -- compute ------------------------------------------------------------
 
