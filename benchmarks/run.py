@@ -13,9 +13,10 @@ trajectory can accumulate across PRs):
   plan_spmm  — SpmmPlan.run vs unplanned spmm (bit-identity asserted)
   sched_*    — scheduler preprocessing throughput + bubble fraction
                (vectorized production scheduler vs exact-greedy reference)
-  serve_*    — batched (geometry-bucketing scheduler) vs sequential
-               serving on a mixed pool of bucket-mates (bit-identity
-               asserted; requests/s and dispatches/request)
+  serve_*    — batched (geometry-bucketing scheduler) vs sequential vs
+               async-pipelined (futures + pack/execute overlap) serving
+               on a mixed pool of bucket-mates (bit-identity asserted;
+               requests/s, dispatches/request, pack_hidden_fraction)
   stream_*   — out-of-core K-window streaming vs the resident plan at
                several device_bytes caps (bit-identity asserted; Mnnz/s,
                window dispatches, peak device working set)
@@ -245,11 +246,14 @@ def bench_scheduler() -> None:
 
 
 def bench_serve() -> None:
-    """Batched vs sequential serving on a mixed pool of 32 bucket-mates
-    (plus a few odd-geometry singletons): the tentpole dispatch-amortization
-    win — one batch-grid dispatch per bucket group instead of one compiled
-    call per request.  Bit-identity between the two paths is asserted
-    before timing."""
+    """Batched vs sequential vs async-pipelined serving on a mixed pool of
+    32 bucket-mates (plus a few odd-geometry singletons): the batched rows
+    measure dispatch amortization (one batch-grid dispatch per bucket
+    group), the ``serve_async`` row measures the futures-based
+    pack/execute overlap on top of it — host packing runs on worker
+    threads while the device computes, reported as
+    ``pack_hidden_fraction``.  Bit-identity across all three paths is
+    asserted before timing."""
     from repro.core.engine import SextansEngine
     from repro.core.sparse import power_law_sparse, random_sparse
     from repro.launch.serve import SpmmRequest, serve_spmm_requests
@@ -269,17 +273,22 @@ def bench_serve() -> None:
     def engine():
         return SextansEngine(tm=128, k0=128, chunk=8, impl="jnp")
 
-    # warm both paths (compiles), then assert bit-identity
+    # warm all paths (compiles), then assert bit-identity
     outs_b, _ = serve_spmm_requests(reqs, engine(), batched=True)
     outs_s, _ = serve_spmm_requests(reqs, engine(), batched=False)
+    outs_a, _ = serve_spmm_requests(reqs, engine(), async_pipeline=True)
     for x, y in zip(outs_b, outs_s):
         assert np.array_equal(x, y), "batched serving diverged"
+    for x, y in zip(outs_b, outs_a):
+        assert np.array_equal(x, y), "async serving diverged from batched"
 
-    for mode, batched in (("serve_batched", True), ("serve_sequential", False)):
+    for mode, kw in (("serve_batched", dict(batched=True)),
+                     ("serve_sequential", dict(batched=False)),
+                     ("serve_async", dict(async_pipeline=True))):
         best = None
         for _ in range(3):
             t0 = time.perf_counter()
-            _, stats = serve_spmm_requests(reqs, engine(), batched=batched)
+            _, stats = serve_spmm_requests(reqs, engine(), **kw)
             dt = time.perf_counter() - t0
             if best is None or dt < best[0]:
                 best = (dt, stats)
@@ -287,14 +296,21 @@ def bench_serve() -> None:
         us = dt * 1e6 / len(reqs)
         rps = len(reqs) / dt
         dpr = stats["dispatches_per_request"]
-        _row(mode, us,
-             f"{rps:.0f}req/s_{dpr:.3f}disp/req_bf{stats['batched_fraction']:.2f}",
+        hidden = stats["pack_hidden_fraction"]
+        derived = (f"{rps:.0f}req/s_{dpr:.3f}disp/req_"
+                   f"bf{stats['batched_fraction']:.2f}")
+        if mode == "serve_async":
+            derived += f"_packhidden{hidden:.2f}_bitexact_vs_batched"
+        _row(mode, us, derived,
              extra={
                  "requests_per_s": rps,
                  "dispatches_per_request": dpr,
                  "batched_fraction": stats["batched_fraction"],
                  "groups": stats["groups"],
                  "compute_gflops": stats["compute_gflops"],
+                 "pack_hidden_fraction": hidden,
+                 "overlap_s": stats["overlap_s"],
+                 "bit_identical": True,
              })
 
 

@@ -1,0 +1,154 @@
+"""Futures-based pack/execute pipeline primitives.
+
+Sextans' core discipline is *overlap*: off-chip data movement is hidden
+behind PE compute so the II=1 pipeline never starves (paper §4).  At the
+serving tier the analogous pair is host **packing** (scheduling +
+``pack_pe_streams``-style preprocessing + group stacking — pure numpy)
+versus device **execution** (compiled-call dispatch).  This module gives
+both the engine (``SextansEngine.spmm_async``) and the serving scheduler
+(``SpmmScheduler(async_pipeline=True)``) one small, dependency-free
+substrate for that overlap:
+
+* :class:`SpmmFuture` — the result handle an async submit returns
+  immediately; resolves (in submit order, by construction of the callers)
+  to the request's result or to the worker exception that produced it.
+* :class:`PackExecutePipeline` — a pack worker pool (host-only numpy work;
+  several packs run concurrently, the buffer-filling inner loops release
+  the GIL) plus ONE dispatch thread (JAX tracing/compilation and device
+  dispatch are serialized, so compiled-call order is deterministic and the
+  executable caches are never raced from two dispatchers).
+
+Thread counts are bounded by ``SEXTANS_PACK_THREADS`` so shared runners
+(CI) don't oversubscribe; the default is ``min(4, cpu_count)``.
+
+Pack stages built on this substrate must stay **host-resident**
+(``pack_hflex(..., device=False)`` → numpy leaves): worker threads never
+touch the device, and the plan tier owns the single ``device_put`` at
+dispatch.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Optional
+
+__all__ = ["SpmmFuture", "PackExecutePipeline", "pack_thread_count"]
+
+
+def pack_thread_count(requested: Optional[int] = None) -> int:
+    """Resolve the pack-stage worker count: explicit argument, else the
+    ``SEXTANS_PACK_THREADS`` environment bound (CI sets this so runners
+    don't oversubscribe), else ``min(4, cpu_count)``."""
+    if requested is not None:
+        return max(1, int(requested))
+    env = os.environ.get("SEXTANS_PACK_THREADS")
+    if env:
+        return max(1, int(env))
+    return max(1, min(4, os.cpu_count() or 1))
+
+
+class SpmmFuture:
+    """Result handle for an asynchronously served SpMM.
+
+    Returned immediately by ``SpmmScheduler.submit`` (async mode) and
+    ``SextansEngine.spmm_async``; resolves to the request's result, or
+    raises the pack/dispatch exception that claimed it.  ``ticket`` is the
+    submit-order position — the pipeline resolves futures in ticket order,
+    so a completed future implies every earlier-ticket future of the same
+    flush has completed too.
+    """
+
+    __slots__ = ("ticket", "_event", "_result", "_exc")
+
+    def __init__(self, ticket: int = -1):
+        self.ticket = ticket
+        self._event = threading.Event()
+        self._result = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        """True once resolved (result or exception set)."""
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until resolved; return the result or re-raise the worker
+        exception.  ``timeout`` in seconds raises ``TimeoutError``."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"SpmmFuture(ticket={self.ticket}) pending "
+                               f"after {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def exception(self, timeout: Optional[float] = None):
+        """Block until resolved; return the exception (or None)."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"SpmmFuture(ticket={self.ticket}) pending "
+                               f"after {timeout}s")
+        return self._exc
+
+    # -- producer side (pipeline-internal) ----------------------------------
+
+    def _set_result(self, value) -> None:
+        self._result = value
+        self._event.set()
+
+    def _set_exception(self, exc: BaseException) -> None:
+        self._exc = exc
+        self._event.set()
+
+    def __repr__(self) -> str:
+        state = ("error" if self._exc is not None else
+                 "done" if self.done() else "pending")
+        return f"SpmmFuture(ticket={self.ticket}, {state})"
+
+
+class PackExecutePipeline:
+    """Pack worker pool + one serialized dispatch thread.
+
+    ``submit_pack`` runs host-only preprocessing concurrently;
+    ``submit_dispatch`` enqueues work on the single dispatch thread, which
+    is where all JAX tracing, compilation and device dispatch of the async
+    path happens — flush N+1's dispatches queue behind flush N's, while
+    flush N+1's *packs* proceed on the workers (the cross-flush overlap).
+    """
+
+    def __init__(self, pack_threads: Optional[int] = None):
+        self.pack_threads = pack_thread_count(pack_threads)
+        self._packs = ThreadPoolExecutor(
+            max_workers=self.pack_threads,
+            thread_name_prefix="sextans-pack")
+        self._dispatch = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="sextans-dispatch")
+        self._closed = False
+
+    def submit_pack(self, fn: Callable, *args):
+        """Run ``fn(*args)`` on the pack pool; returns its
+        ``concurrent.futures.Future``."""
+        return self._packs.submit(fn, *args)
+
+    def submit_dispatch(self, fn: Callable, *args):
+        """Run ``fn(*args)`` on the dispatch thread (FIFO, serialized)."""
+        return self._dispatch.submit(fn, *args)
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Drain and join both stages (idempotent).
+
+        The dispatch thread is joined FIRST: a still-queued flush
+        coordinator submits group-stack packs while it drains, so the pack
+        pool must stay open until every dispatch job has finished —
+        joining the pack pool first would reject those submissions and
+        strand the flush's futures unresolved."""
+        if self._closed:
+            return
+        self._closed = True
+        self._dispatch.shutdown(wait=wait)
+        self._packs.shutdown(wait=wait)
+
+    def __enter__(self) -> "PackExecutePipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -26,6 +26,14 @@ The engine is a thin stats-and-sharding wrapper over the unified front-end
 :mod:`repro.sparse_api` (SparseTensor + backend registry); ``impl`` is a
 registered backend name ("pallas" | "pallas_onehot" | "jnp" | "auto").
 
+:meth:`SextansEngine.spmm_async` is the futures-based entry point: the
+pack runs host-resident (``pack(device=False)``) on a worker thread, the
+dispatch thread issues the compiled call (the plan owns the single
+``device_put``), and the returned :class:`SpmmFuture` resolves to the
+result — host packing overlaps device compute, the serving analogue of
+the paper's off-chip-stream/PE overlap.  Engine state is lock-guarded so
+the async pipeline's threads and the owning thread can share one engine.
+
 Also provides the multi-chip execution plan: A row-blocks sharded across
 the ``data`` axis (the paper's `row mod P` lifted to chips — C shards are
 disjoint, the inner loop needs **zero** cross-chip collectives), B
@@ -35,6 +43,7 @@ column-tiles sharded across ``model``.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -42,6 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.async_pipeline import PackExecutePipeline, SpmmFuture
 from repro.core.partition import cdiv
 from repro.core.sparse import SparseMatrix
 
@@ -108,19 +118,34 @@ class SextansEngine:
         # caller's object so its id stays live (and unique) while cached.
         # Bounded at PLAN_CACHE_CAP (see plan_for).
         self._plans: Dict[Tuple, Tuple] = {}
+        # Engine state (stats counters, plan cache, signature set) is
+        # mutated from worker/dispatch threads by the async serving
+        # pipeline as well as by the owning thread — one reentrant lock
+        # guards those mutations (counting, not dispatch, is serialized).
+        self._lock = threading.RLock()
+        self._pipe: Optional[PackExecutePipeline] = None
 
     # -- preprocessing ------------------------------------------------------
 
-    def pack(self, a: SparseMatrix) -> "SparseTensor":
+    def pack(self, a: SparseMatrix, device: bool = True) -> "SparseTensor":
+        """Pack a host COO matrix into the engine's slab geometry.
+
+        ``device=False`` keeps the payload **host-resident** (numpy
+        leaves): safe to call from pack worker threads, never commits
+        device memory at pack time (the plan tier device_puts once at
+        dispatch) — so an over-budget payload can go straight to the
+        streaming lane without ever existing on device.
+        """
         from repro.sparse_api import Format, from_sparse_matrix
 
         t = from_sparse_matrix(
             a, format=Format.HFLEX, tm=self.tm, k0=self.k0, chunk=self.chunk,
-            interleave=self.interleave, bucket=self.bucket,
+            interleave=self.interleave, bucket=self.bucket, device=device,
         )
-        self.stats.packs += 1
-        self.stats.real_nnz += t.nnz
-        self.stats.padded_slots += int(np.prod(t.data.vals.shape)) - t.nnz
+        with self._lock:
+            self.stats.packs += 1
+            self.stats.real_nnz += t.nnz
+            self.stats.padded_slots += int(np.prod(t.data.vals.shape)) - t.nnz
         return t
 
     def _as_tensor(self, packed) -> "SparseTensor":
@@ -183,7 +208,8 @@ class SextansEngine:
         key = (id(packed), int(n), str(dtype))
         if stream:
             key += ("stream", device_bytes, window_chunk)
-        hit = self._plans.get(key)
+        with self._lock:
+            hit = self._plans.get(key)
         if hit is not None:
             return hit[1]
         t = self._as_tensor(packed)
@@ -194,9 +220,10 @@ class SextansEngine:
         else:
             pl = _plan(t, n, backend=self.impl, dtype=dtype,
                        tn=self.tn, interpret=self.interpret)
-        while len(self._plans) >= self.PLAN_CACHE_CAP:
-            self._plans.pop(next(iter(self._plans)))
-        self._plans[key] = (packed, pl)
+        with self._lock:
+            while len(self._plans) >= self.PLAN_CACHE_CAP:
+                self._plans.pop(next(iter(self._plans)))
+            self._plans[key] = (packed, pl)
         return pl
 
     def spmm(
@@ -211,13 +238,14 @@ class SextansEngine:
 
         t = self._as_tensor(packed)
         sig = self.signature(t, b.shape[1], b)
-        if sig in self._seen_signatures:
-            self.stats.cache_hits += 1
-        else:
-            self.stats.cache_misses += 1
-            self._seen_signatures.add(sig)
-        self.stats.calls += 1
-        self.stats.dispatches += 1
+        with self._lock:
+            if sig in self._seen_signatures:
+                self.stats.cache_hits += 1
+            else:
+                self.stats.cache_misses += 1
+                self._seen_signatures.add(sig)
+            self.stats.calls += 1
+            self.stats.dispatches += 1
         if self.use_plans:
             # Pass the *caller's* object: the plan cache keys on its id, so
             # legacy PackedSpMM inputs hit the cache across calls.
@@ -259,17 +287,18 @@ class SextansEngine:
         self.last_streaming_plan = pl
         npad = cdiv(n, self.tn) * self.tn
         sig = (*t.geometry, npad, pl.backend, "stream", pl.window_chunk)
-        if sig in self._seen_signatures:
-            self.stats.cache_hits += 1
-        else:
-            self.stats.cache_misses += 1
-            self._seen_signatures.add(sig)
-        self.stats.calls += 1
-        self.stats.streamed += 1
-        self.stats.dispatches += pl.steps + 1
-        self.stats.window_dispatches += pl.steps
-        self.stats.peak_payload_bytes = max(self.stats.peak_payload_bytes,
-                                            pl.peak_payload_bytes)
+        with self._lock:
+            if sig in self._seen_signatures:
+                self.stats.cache_hits += 1
+            else:
+                self.stats.cache_misses += 1
+                self._seen_signatures.add(sig)
+            self.stats.calls += 1
+            self.stats.streamed += 1
+            self.stats.dispatches += pl.steps + 1
+            self.stats.window_dispatches += pl.steps
+            self.stats.peak_payload_bytes = max(self.stats.peak_payload_bytes,
+                                                pl.peak_payload_bytes)
         return pl.run(b, c, alpha, beta)
 
     def spmm_group(
@@ -305,18 +334,78 @@ class SextansEngine:
         b = jnp.asarray(b)
         n = b.shape[-1]
         sig = self.signature(t, n, b)
-        for _ in range(g):
-            if sig in self._seen_signatures:
-                self.stats.cache_hits += 1
-            else:
-                self.stats.cache_misses += 1
-                self._seen_signatures.add(sig)
-        self.stats.calls += g
-        self.stats.dispatches += 1
-        self.stats.group_calls += 1
+        with self._lock:
+            for _ in range(g):
+                if sig in self._seen_signatures:
+                    self.stats.cache_hits += 1
+                else:
+                    self.stats.cache_misses += 1
+                    self._seen_signatures.add(sig)
+            self.stats.calls += g
+            self.stats.dispatches += 1
+            self.stats.group_calls += 1
         pl = _plan_group(t, n, backend=self.impl, dtype=b.dtype,
                          tn=self.tn, interpret=self.interpret)
         return pl.run(b, c, alpha, beta)
+
+    # -- async pipeline -----------------------------------------------------
+
+    def pipeline(self, pack_threads: Optional[int] = None) -> PackExecutePipeline:
+        """The engine's lazily created pack/execute pipeline (pack worker
+        pool + one dispatch thread; see :mod:`repro.core.async_pipeline`).
+        Shared by every :meth:`spmm_async` call; ``close()`` joins it."""
+        with self._lock:
+            if self._pipe is None:
+                self._pipe = PackExecutePipeline(pack_threads)
+            return self._pipe
+
+    def spmm_async(
+        self,
+        a: SparseMatrix,
+        b,
+        c=None,
+        alpha: float = 1.0,
+        beta: float = 0.0,
+    ) -> SpmmFuture:
+        """Non-blocking ``pack + spmm``: returns a :class:`SpmmFuture`
+        immediately.
+
+        The pack runs **host-resident** (``pack(device=False)``) on a pack
+        worker thread; the dispatch thread then issues the compiled call —
+        the plan performs the single ``device_put`` there — and resolves
+        the future with the *device* result (itself an async value under
+        JAX dispatch; ``np.asarray(fut.result())`` materializes it).
+        Several in-flight calls pack concurrently while the dispatch
+        thread pipelines their launches in submit order, so host packing
+        overlaps device compute.  Results are bit-identical to
+        ``spmm(pack(a), ...)``; pack/dispatch exceptions resolve the
+        future instead of being swallowed.
+        """
+        pipe = self.pipeline()
+        fut = SpmmFuture()
+        bn = np.asarray(b)
+        cn = None if c is None else np.asarray(c)
+        pf = pipe.submit_pack(self.pack, a, False)
+
+        def dispatch():
+            try:
+                t = pf.result()
+                out = self.spmm(t, jnp.asarray(bn),
+                                None if cn is None else jnp.asarray(cn),
+                                alpha, beta)
+                fut._set_result(out)
+            except Exception as exc:      # noqa: BLE001 — owned by the future
+                fut._set_exception(exc)
+
+        pipe.submit_dispatch(dispatch)
+        return fut
+
+    def close(self) -> None:
+        """Join the async pipeline threads, if any were started."""
+        with self._lock:
+            pipe, self._pipe = self._pipe, None
+        if pipe is not None:
+            pipe.shutdown()
 
     def __call__(self, a: SparseMatrix, b, c=None, alpha: float = 1.0, beta: float = 0.0):
         return self.spmm(self.pack(a), jnp.asarray(b),

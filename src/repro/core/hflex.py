@@ -445,6 +445,7 @@ def pack_block_slabs(
     chunk: int = 8,
     lw_bucket: Optional[int] = None,
     interleave: bool = True,
+    bucket: bool = False,
 ) -> BlockSlabs:
     """Pack A into (MB, NW, LW) slabs for the Pallas kernel.
 
@@ -453,6 +454,12 @@ def pack_block_slabs(
     C tile through the same permutation, applied by the wrapper. This evens
     out per-slab nnz so LW (and thus padding) shrinks — measured by
     ``padding_fraction``.
+
+    ``bucket=True`` rounds LW up to its power-of-two bucket
+    (:func:`bucket_geometry`) at allocation time, so similar-density
+    matrices share one compiled executable without a second padding copy
+    (the slab buffers are written once at their final size — this is the
+    packing hot path, and host-resident packing runs it on worker threads).
     """
     a = a.sorted_column_major()
     a.validate()
@@ -479,6 +486,8 @@ def pack_block_slabs(
     counts = np.bincount(flat, minlength=mb * nw).reshape(mb, nw)
     lw_needed = int(counts.max()) if counts.size else 0
     lw = max(chunk, cdiv(max(lw_needed, 1), chunk) * chunk)
+    if bucket:
+        lw = bucket_geometry(mb, nw, lw, 1)[2]
     if lw_bucket is not None:
         if lw_bucket < lw:
             raise ValueError(f"lw_bucket {lw_bucket} < required {lw}")

@@ -14,15 +14,37 @@ Two serving paths, matching the paper's two deployment stories:
    scatters results back in request order — dispatch overhead amortizes
    G-fold, the analogue of keeping every HBM channel busy with independent
    problems.  Results are bit-identical to per-request execution.
+
+   With ``async_pipeline=True`` the scheduler becomes a **pipelined
+   producer/consumer** (the paper's off-chip-stream/PE overlap lifted to
+   the serving tier): ``submit()`` returns a :class:`SpmmFuture`
+   immediately and starts the request's *host-resident* pack
+   (``pack_hflex(device=False)`` — numpy leaves, no device touch) on a
+   pack worker thread; ``flush()`` is non-blocking and hands the batch to
+   a dispatch thread that forms the same groups as the synchronous path
+   (request packs ran concurrently; grouping waits for them all so it
+   stays deterministic), stacks each group host-side on the workers, and
+   launches each group's compiled call **as soon as its group pack
+   completes** — so flush N+1 packs while flush N computes, and within a
+   flush, group g+1 packs/stacks while group g runs on device.  Futures
+   resolve in submit order, results stay bit-identical to the synchronous
+   path, and worker exceptions propagate to the owning future (the failed
+   request is restored to the queue for retry, as the synchronous path
+   restores its queue on failure).  The hidden host time is reported as
+   ``overlap_s`` / ``pack_hidden_fraction``.
+
    ``serve_spmm_requests`` wraps the scheduler for one-shot pools and
    reports the compile-cache hit rate plus grouping stats
    (``groups``, ``batched_fraction``, ``dispatches_per_request``) and
-   ``compute_gflops`` (wall − preprocess, matching how the paper separates
-   preprocessing from execution).  With a ``device_bytes`` budget, requests
-   whose packed payload exceeds it take the *out-of-core streaming lane*
-   (``SextansEngine.spmm_streaming``): K0-window chunks stream through a
-   persistent C accumulator — multiple dispatches per request, tracked in
-   ``streamed`` / ``window_dispatches`` / ``peak_payload_bytes``.
+   ``compute_gflops`` (wall − non-hidden preprocessing, matching how the
+   paper separates preprocessing from execution).  With a ``device_bytes``
+   budget, requests whose packed payload exceeds it take the *out-of-core
+   streaming lane* (``SextansEngine.spmm_streaming``): K0-window chunks
+   stream through a persistent C accumulator — multiple dispatches per
+   request, tracked in ``streamed`` / ``window_dispatches`` /
+   ``peak_payload_bytes``.  Because packing is host-resident, an
+   over-budget payload now reaches the streaming lane without ever having
+   existed on device (the pack-time OOM the resident pack mode had).
 
 2. **LM serving**: prefill + token-by-token decode with a KV/state cache
    (examples/serve_lm.py drives this at CPU scale; the decode dry-run cells
@@ -31,19 +53,23 @@ Two serving paths, matching the paper's two deployment stories:
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import threading
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.async_pipeline import PackExecutePipeline, SpmmFuture
 from repro.core.engine import SextansEngine
 from repro.core.sparse import SparseMatrix
+from repro.sparse_api import stack_hflex
 
-__all__ = ["SpmmRequest", "SpmmScheduler", "serve_spmm_requests",
-           "lm_generate"]
+__all__ = ["SpmmRequest", "SpmmFuture", "SpmmScheduler",
+           "serve_spmm_requests", "lm_generate"]
 
 
 @dataclasses.dataclass
@@ -67,19 +93,61 @@ def _embed(t, m_cap: int, k_cap: int):
     return SparseTensor(data=d, format=t.format, shape=(m_cap, k_cap))
 
 
+@dataclasses.dataclass
+class _Entry:
+    """One queued request: its ticket, and — in async mode — the owning
+    future plus the in-flight pack (``pack``) / packed tensor state."""
+
+    ticket: int
+    request: SpmmRequest
+    future: Optional[SpmmFuture] = None
+    pack: Any = None          # concurrent.futures.Future of _pack_host
+    tensor: Any = None        # host-resident SparseTensor once packed
+
+
+@dataclasses.dataclass
+class _FlushCounters:
+    """Per-flush dispatch accounting, shared by the sync and async paths."""
+
+    groups: int = 0
+    dispatches: int = 0
+    batched: int = 0
+    streamed: int = 0
+    window_disp: int = 0
+    peak: int = 0
+
+
 class SpmmScheduler:
     """Geometry-bucketing SpMM serving scheduler (submit / flush).
 
-    ``submit(request)`` queues a request and returns its ticket;
-    ``flush()`` executes everything queued and returns results in submit
-    order.  Inside a flush, requests whose packed tensors share a bucketed
-    slab geometry (HFlex bucket-mates), padded dense width, dtype and
-    epilogue scalars are stacked into one batched dispatch
+    ``submit(request)`` queues a request; ``flush()`` executes everything
+    queued.  Inside a flush, requests whose packed tensors share a
+    bucketed slab geometry (HFlex bucket-mates), padded dense width, dtype
+    and epilogue scalars are stacked into one batched dispatch
     (``SextansEngine.spmm_group``); ragged logical shapes within a bucket
     are embedded in the group's bounding (M, K) and ragged N is padded up
     to the bucket — both bit-exactly (zero columns/rows never contribute,
     and segment-sum prefixes are exact).  Everything else executes as
-    singleton plan calls.
+    singleton plan calls.  Packing is **host-resident** end to end
+    (``pack_hflex(device=False)``): slab payloads stay numpy until the
+    plan tier performs the single ``device_put`` at dispatch.
+
+    **Synchronous mode** (default): ``submit`` returns an int ticket,
+    ``flush()`` blocks and returns results in submit order.  On failure
+    the queue is restored (ahead of anything submitted since), so one
+    malformed request cannot silently drop the rest.
+
+    **Async pipeline mode** (``async_pipeline=True``): ``submit`` returns
+    a :class:`SpmmFuture` immediately and starts the pack on a worker
+    thread; ``flush()`` is non-blocking — it hands the batch to the
+    dispatch thread and returns the batch's futures.  The dispatch stage
+    launches each group as soon as its (host) pack completes, so packing
+    overlaps device execution across *and* within flushes; futures resolve
+    in submit order with results bit-identical to synchronous ``flush()``.
+    A pack/dispatch exception resolves the owning future with that
+    exception and restores the failed request to the queue (retry on the
+    next flush — remove it with :meth:`cancel` to drop it instead);
+    unaffected requests still execute.
 
     ``device_bytes`` adds the *out-of-core streaming lane*: a request whose
     packed payload exceeds the budget bypasses group stacking and executes
@@ -103,6 +171,12 @@ class SpmmScheduler:
       the device working-set high-water of any streamed request;
     * ``preprocess_s`` vs ``wall_s`` — pack() time separated from
       execution, the paper's preprocessing/execution split;
+    * ``overlap_s`` / ``pack_stall_s`` — async mode: pack time hidden
+      behind the pipeline (workers packed while the dispatch stage was
+      busy) vs pack time the dispatch stage actually had to wait for;
+      ``pack_hidden_fraction = overlap_s / preprocess_s``;
+    * ``failed`` — requests whose future resolved with an exception (and
+      were restored to the queue);
     * ``last_flush`` — the same counters scoped to the most recent flush
       (per-flush reporting: multi-dispatch streaming requests made the
       cumulative numbers alone ambiguous).
@@ -111,7 +185,9 @@ class SpmmScheduler:
     def __init__(self, engine: Optional[SextansEngine] = None,
                  max_group: int = 64,
                  device_bytes: Optional[int] = None,
-                 window_chunk: Optional[int] = None):
+                 window_chunk: Optional[int] = None,
+                 async_pipeline: bool = False,
+                 pack_threads: Optional[int] = None):
         self.engine = engine or SextansEngine(tm=128, k0=512, chunk=8,
                                               impl="jnp")
         if max_group < 1:
@@ -119,7 +195,11 @@ class SpmmScheduler:
         self.max_group = max_group
         self.device_bytes = device_bytes
         self.window_chunk = window_chunk
-        self._pending: List[Tuple[int, SpmmRequest]] = []
+        self.async_pipeline = bool(async_pipeline)
+        self._pipe = (PackExecutePipeline(pack_threads)
+                      if self.async_pipeline else None)
+        self._lock = threading.Lock()
+        self._pending: List[_Entry] = []
         self._next_ticket = 0
         self.stats: Dict[str, Any] = {
             "requests": 0,
@@ -129,17 +209,22 @@ class SpmmScheduler:
             "streamed": 0,
             "window_dispatches": 0,
             "peak_payload_bytes": 0,
+            "failed": 0,
             "flushes": 0,
             "wall_s": 0.0,
             "preprocess_s": 0.0,
+            "overlap_s": 0.0,
+            "pack_stall_s": 0.0,
             "flops": 0.0,
             "last_flush": {},
         }
 
     # -- queueing -----------------------------------------------------------
 
-    def submit(self, request: SpmmRequest) -> int:
-        """Queue a request; returns its ticket (flush-order position).
+    def submit(self, request: SpmmRequest) -> Union[int, SpmmFuture]:
+        """Queue a request.  Synchronous mode returns its int ticket
+        (flush-order position); async mode returns a :class:`SpmmFuture`
+        immediately and starts the host pack on a worker thread.
 
         Operands are normalized to ndarrays here (array-likes accepted)."""
         b = np.asarray(request.b)
@@ -152,16 +237,59 @@ class SpmmScheduler:
                 f"{(request.a.shape[0], b.shape[1])}, got {c.shape}")
         if b is not request.b or c is not request.c:
             request = dataclasses.replace(request, b=b, c=c)
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._pending.append((ticket, request))
-        return ticket
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+        if not self.async_pipeline:
+            self._pending.append(_Entry(ticket, request))
+            return ticket
+        e = _Entry(ticket, request, future=SpmmFuture(ticket))
+        e.pack = self._pipe.submit_pack(self._pack_host, request)
+        with self._lock:
+            self._pending.append(e)
+        return e.future
+
+    def cancel(self, ticket: int) -> bool:
+        """Remove a pending (not yet flushed) request by ticket — e.g. a
+        request whose future failed and was restored for retry.  Its
+        unresolved future (if any) is resolved with ``CancelledError``.
+        Returns True if an entry was removed."""
+        with self._lock:
+            for i, e in enumerate(self._pending):
+                if e.ticket == ticket:
+                    del self._pending[i]
+                    break
+            else:
+                return False
+        if e.future is not None and not e.future.done():
+            e.future._set_exception(concurrent.futures.CancelledError())
+        return True
 
     @property
     def pending(self) -> int:
-        return len(self._pending)
+        with self._lock:
+            return len(self._pending)
 
-    # -- execution ----------------------------------------------------------
+    def shutdown(self, wait: bool = True) -> None:
+        """Join the async pipeline threads (no-op in synchronous mode).
+        Call after the last ``flush()``; pending futures resolve first
+        when ``wait=True``."""
+        if self._pipe is not None:
+            self._pipe.shutdown(wait=wait)
+
+    def __enter__(self) -> "SpmmScheduler":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- pack stage (host-resident, worker-thread safe) ----------------------
+
+    def _pack_host(self, r: SpmmRequest):
+        """Pack one request's matrix host-resident; returns (tensor, s)."""
+        t0 = time.perf_counter()
+        t = self.engine.pack(r.a, device=False)
+        return t, time.perf_counter() - t0
 
     def _group_key(self, t, r: SpmmRequest):
         from repro.core.hflex import bucket_geometry
@@ -171,111 +299,25 @@ class SpmmScheduler:
         return (t.geometry, n_b, np.dtype(np.asarray(r.b).dtype).str,
                 float(r.alpha), float(r.beta))
 
-    def flush(self) -> List[np.ndarray]:
-        """Execute all queued requests; results in submit order.
+    def _route(self, e: _Entry, groups: Dict, stream_lane: List) -> None:
+        """Send a packed entry to its bucket group or the streaming lane."""
+        if (self.device_bytes is not None
+                and e.tensor.nbytes > self.device_bytes):
+            # Oversized: route around group stacking — stacking would
+            # multiply the resident payload by G, the opposite of what
+            # an over-budget matrix needs.
+            stream_lane.append(e)
+        else:
+            key = self._group_key(e.tensor, e.request)
+            groups.setdefault(key, []).append(e)
 
-        On failure the queue is restored (ahead of anything submitted
-        since), so one malformed request cannot silently drop the rest —
-        the caller can remove it and retry."""
-        pending, self._pending = self._pending, []
-        if not pending:
-            return []
-        try:
-            return self._flush(pending)
-        except Exception:
-            self._pending = pending + self._pending
-            raise
-
-    def _flush(self, pending: List[Tuple[int, SpmmRequest]]) -> List[np.ndarray]:
-        eng = self.engine
+    def _prep_group(self, key, chunk: List[_Entry]):
+        """Host-side group pack stage: embed the bucket-mates in the
+        geometry-constant bounds, stack them (host-resident — no device
+        touch; this runs on pack workers in async mode), and assemble the
+        batched dense operands.  Returns ((stacked, bg, cg, alpha, beta),
+        seconds)."""
         t0 = time.perf_counter()
-        pack_s = 0.0
-        groups: Dict[Any, List] = {}
-        stream_lane: List[Tuple[int, SpmmRequest, Any]] = []
-        for ticket, r in pending:
-            tp = time.perf_counter()
-            t = eng.pack(r.a)
-            pack_s += time.perf_counter() - tp
-            if (self.device_bytes is not None
-                    and t.nbytes > self.device_bytes):
-                # Oversized: route around group stacking — stacking would
-                # multiply the resident payload by G, the opposite of what
-                # an over-budget matrix needs.
-                stream_lane.append((ticket, r, t))
-            else:
-                key = self._group_key(t, r)
-                groups.setdefault(key, []).append((ticket, r, t))
-
-        results: Dict[int, Tuple[jax.Array, int, int]] = {}
-        dispatches = 0
-        batched = 0
-        ngroups = 0
-        streamed = 0
-        window_disp = 0
-        for key, members in groups.items():
-            for lo in range(0, len(members), self.max_group):
-                chunk = members[lo:lo + self.max_group]
-                ngroups += 1
-                dispatches += 1
-                if len(chunk) == 1:
-                    ticket, r, t = chunk[0]
-                    out = eng.spmm(
-                        t, jnp.asarray(r.b),
-                        None if r.c is None else jnp.asarray(r.c),
-                        r.alpha, r.beta)
-                    results[ticket] = (out, r.a.shape[0], r.b.shape[1])
-                else:
-                    self._run_group(key, chunk, results)
-                    batched += len(chunk)
-        peak = 0
-        for ticket, r, t in stream_lane:
-            out = eng.spmm_streaming(
-                t, r.b, None if r.c is None else jnp.asarray(r.c),
-                r.alpha, r.beta, device_bytes=self.device_bytes,
-                window_chunk=self.window_chunk)
-            # per-call stats from the plan this exact call ran through —
-            # not the engine's lifetime aggregates
-            pl = eng.last_streaming_plan
-            dispatches += pl.steps + 1         # window steps + epilogue
-            window_disp += pl.steps
-            peak = max(peak, pl.peak_payload_bytes)
-            streamed += 1
-            results[ticket] = (out, r.a.shape[0], r.b.shape[1])
-        for out, _, _ in results.values():
-            jax.block_until_ready(out)
-        wall = time.perf_counter() - t0
-
-        st = self.stats
-        st["requests"] += len(pending)
-        st["groups"] += ngroups
-        st["dispatches"] += dispatches
-        st["batched_requests"] += batched
-        st["streamed"] += streamed
-        st["window_dispatches"] += window_disp
-        st["peak_payload_bytes"] = max(st["peak_payload_bytes"], peak)
-        st["flushes"] += 1
-        st["wall_s"] += wall
-        st["preprocess_s"] += pack_s
-        st["flops"] += float(sum(
-            r.a.problem_size_flop(r.b.shape[1]) for _, r in pending))
-        st["last_flush"] = {
-            "requests": len(pending),
-            "groups": ngroups,
-            "dispatches": dispatches,
-            "batched_requests": batched,
-            "streamed": streamed,
-            "window_dispatches": window_disp,
-        }
-        return [
-            np.asarray(results[ticket][0])[:results[ticket][1],
-                                           :results[ticket][2]]
-            for ticket, _ in pending
-        ]
-
-    def _run_group(self, key, chunk, results) -> None:
-        """Stack one bucket group and execute it as a single dispatch."""
-        from repro.sparse_api import stack_hflex
-
         n_b = key[1]
         alpha, beta = key[3], key[4]
         # Embed to the geometry-constant bounds (MB*TM, NW*K0), NOT the
@@ -285,27 +327,296 @@ class SpmmScheduler:
         # by every bucket-mate, making the group executable flush-invariant
         # (waste is < one row tile + one K window, and the padding rows/
         # cols are exact zeros — results stay bit-identical).
-        d0 = chunk[0][2].data
+        d0 = chunk[0].tensor.data
         m_cap = d0.mb * d0.tm
         k_cap = d0.nw * d0.k0
         stacked = stack_hflex(
-            [_embed(t, m_cap, k_cap) for _, _, t in chunk])
+            [_embed(e.tensor, m_cap, k_cap) for e in chunk], device=False)
         g = len(chunk)
         np_dtype = np.dtype(key[2])
         bg = np.zeros((g, k_cap, n_b), np_dtype)
-        any_c = any(r.c is not None for _, r, _ in chunk)
+        any_c = any(e.request.c is not None for e in chunk)
         cg = np.zeros((g, m_cap, n_b), np_dtype) if any_c else None
-        for i, (_, r, _) in enumerate(chunk):
+        for i, e in enumerate(chunk):
+            r = e.request
             bk, bn = r.b.shape
             bg[i, :bk, :bn] = r.b
             if r.c is not None:
                 cm, cn = r.c.shape
                 cg[i, :cm, :cn] = r.c
+        return (stacked, bg, cg, alpha, beta), time.perf_counter() - t0
+
+    # -- dispatch stage ------------------------------------------------------
+
+    def _dispatch_single(self, e: _Entry, results: Dict) -> None:
+        r = e.request
+        out = self.engine.spmm(
+            e.tensor, jnp.asarray(r.b),
+            None if r.c is None else jnp.asarray(r.c), r.alpha, r.beta)
+        results[e.ticket] = (out, r.a.shape[0], r.b.shape[1])
+
+    def _dispatch_group(self, chunk: List[_Entry], prep, results: Dict) -> None:
+        stacked, bg, cg, alpha, beta = prep
         out = self.engine.spmm_group(
             stacked, jnp.asarray(bg),
             None if cg is None else jnp.asarray(cg), alpha, beta)
-        for i, (ticket, r, _) in enumerate(chunk):
-            results[ticket] = (out[i], r.a.shape[0], r.b.shape[1])
+        for i, e in enumerate(chunk):
+            results[e.ticket] = (out[i], e.request.a.shape[0],
+                                 e.request.b.shape[1])
+
+    def _dispatch_stream(self, e: _Entry, results: Dict,
+                         ctr: _FlushCounters) -> None:
+        r = e.request
+        out = self.engine.spmm_streaming(
+            e.tensor, r.b, None if r.c is None else jnp.asarray(r.c),
+            r.alpha, r.beta, device_bytes=self.device_bytes,
+            window_chunk=self.window_chunk)
+        # per-call stats from the plan this exact call ran through —
+        # not the engine's lifetime aggregates
+        pl = self.engine.last_streaming_plan
+        ctr.dispatches += pl.steps + 1         # window steps + epilogue
+        ctr.window_disp += pl.steps
+        ctr.peak = max(ctr.peak, pl.peak_payload_bytes)
+        ctr.streamed += 1
+        results[e.ticket] = (out, r.a.shape[0], r.b.shape[1])
+
+    # -- execution: synchronous ----------------------------------------------
+
+    def flush(self) -> Union[List[np.ndarray], List[SpmmFuture]]:
+        """Execute all queued requests.
+
+        Synchronous mode blocks and returns results in submit order; on
+        failure the queue is restored (ahead of anything submitted since),
+        so one malformed request cannot silently drop the rest — the
+        caller can remove it and retry.
+
+        Async mode is non-blocking: the batch is handed to the dispatch
+        thread and the batch's futures are returned immediately (the same
+        objects ``submit`` returned; restored-after-failure requests get
+        fresh futures here).  Futures resolve in submit order."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        if not pending:
+            return []
+        if self.async_pipeline:
+            for e in pending:
+                if e.pack is None:      # restored after a failure: re-pack
+                    e.pack = self._pipe.submit_pack(self._pack_host,
+                                                    e.request)
+            self._pipe.submit_dispatch(self._flush_async, pending)
+            return [e.future for e in pending]
+        try:
+            return self._flush(pending)
+        except Exception:
+            with self._lock:
+                self._pending = pending + self._pending
+            raise
+
+    def _flush(self, pending: List[_Entry]) -> List[np.ndarray]:
+        eng = self.engine
+        t0 = time.perf_counter()
+        pack_s = 0.0
+        groups: Dict[Any, List[_Entry]] = {}
+        stream_lane: List[_Entry] = []
+        for e in pending:
+            e.tensor, dt = self._pack_host(e.request)
+            pack_s += dt
+            self._route(e, groups, stream_lane)
+
+        results: Dict[int, Tuple[jax.Array, int, int]] = {}
+        ctr = _FlushCounters()
+        for key, members in groups.items():
+            for lo in range(0, len(members), self.max_group):
+                chunk = members[lo:lo + self.max_group]
+                ctr.groups += 1
+                ctr.dispatches += 1
+                if len(chunk) == 1:
+                    self._dispatch_single(chunk[0], results)
+                else:
+                    prep, dt = self._prep_group(key, chunk)
+                    pack_s += dt
+                    self._dispatch_group(chunk, prep, results)
+                    ctr.batched += len(chunk)
+        for e in stream_lane:
+            self._dispatch_stream(e, results, ctr)
+        for out, _, _ in results.values():
+            jax.block_until_ready(out)
+        wall = time.perf_counter() - t0
+        # synchronous mode: packing is fully serialized with execution, so
+        # ALL pack time is stall, none hidden (overlap_s stays 0)
+        self._note_flush(len(pending), ctr, wall, pack_s,
+                         stall_s=pack_s, failed=0,
+                         flops=sum(e.request.a.problem_size_flop(
+                             e.request.b.shape[1]) for e in pending))
+        return [
+            np.asarray(results[e.ticket][0])[:results[e.ticket][1],
+                                             :results[e.ticket][2]]
+            for e in pending
+        ]
+
+    # -- execution: async pipeline -------------------------------------------
+
+    def _flush_async(self, entries: List[_Entry]) -> None:
+        """Coordinator for one async flush; runs ON the dispatch thread.
+
+        A failure of the coordinator itself (as opposed to a per-request
+        pack/dispatch error, which `_flush_async_inner` owns) must never
+        strand the batch: every still-unresolved future gets the
+        exception and its request is restored to the queue — the async
+        analogue of the synchronous flush's restore-and-raise."""
+        try:
+            self._flush_async_inner(entries)
+        except BaseException as exc:    # noqa: BLE001 — owed to the futures
+            restored = []
+            for e in entries:
+                if not e.future.done():
+                    e.future._set_exception(exc)
+                    restored.append(_Entry(e.ticket, e.request,
+                                           future=SpmmFuture(e.ticket)))
+            if restored:
+                with self._lock:
+                    self.stats["failed"] += len(restored)
+                    self._pending = restored + self._pending
+
+    def _flush_async_inner(self, entries: List[_Entry]) -> None:
+        """One async flush: wait for the batch's host packs (started at
+        submit time; they ran concurrently, so this stalls only on the
+        slowest tail — the wait is required because bucket groups are
+        formed from ALL of the flush's packed geometries, keeping the
+        grouping deterministic and identical to the synchronous path),
+        then dispatch every unit as soon as its *group-level* pack lands:
+        singletons first (no host prep, the device fills while stacks
+        build), multi-member groups in stack-completion order, then the
+        streaming lane.  Futures resolve strictly in ticket order at the
+        end; failed requests resolve with their exception and are
+        restored to the queue."""
+        t0 = time.perf_counter()
+        pack_s = 0.0
+        stall_s = 0.0
+        failed: Dict[int, BaseException] = {}
+        groups: Dict[Any, List[_Entry]] = {}
+        stream_lane: List[_Entry] = []
+        for e in entries:               # ticket order — same groups as sync
+            ts = time.perf_counter()
+            try:
+                e.tensor, dt = e.pack.result()
+            except Exception as exc:    # noqa: BLE001 — owned by the future
+                failed[e.ticket] = exc
+                continue
+            finally:
+                stall_s += time.perf_counter() - ts
+            pack_s += dt
+            self._route(e, groups, stream_lane)
+
+        singles: List[List[_Entry]] = []
+        stacked_units: List[Tuple[Any, List[_Entry]]] = []
+        for key, members in groups.items():
+            for lo in range(0, len(members), self.max_group):
+                chunk = members[lo:lo + self.max_group]
+                if len(chunk) == 1:
+                    singles.append(chunk)
+                else:
+                    stacked_units.append((key, chunk))
+        # group pack stage: stacks build on the workers while the device
+        # runs whatever has already been dispatched
+        prep_futs = {
+            self._pipe.submit_pack(self._prep_group, key, chunk): chunk
+            for key, chunk in stacked_units
+        }
+
+        results: Dict[int, Tuple[jax.Array, int, int]] = {}
+        ctr = _FlushCounters()
+        for chunk in singles:           # no host prep — dispatch first
+            e = chunk[0]
+            try:
+                self._dispatch_single(e, results)
+                ctr.groups += 1
+                ctr.dispatches += 1
+            except Exception as exc:    # noqa: BLE001
+                failed[e.ticket] = exc
+        remaining = set(prep_futs)
+        while remaining:                # dispatch groups as packs complete
+            ts = time.perf_counter()
+            done, remaining = concurrent.futures.wait(
+                remaining, return_when=concurrent.futures.FIRST_COMPLETED)
+            stall_s += time.perf_counter() - ts
+            for f in done:
+                chunk = prep_futs[f]
+                try:
+                    prep, dt = f.result()
+                    pack_s += dt
+                    self._dispatch_group(chunk, prep, results)
+                    ctr.groups += 1
+                    ctr.dispatches += 1
+                    ctr.batched += len(chunk)
+                except Exception as exc:    # noqa: BLE001
+                    for e in chunk:
+                        failed[e.ticket] = exc
+        for e in stream_lane:
+            try:
+                self._dispatch_stream(e, results, ctr)
+            except Exception as exc:        # noqa: BLE001
+                failed[e.ticket] = exc
+
+        # resolve strictly in ticket order: a done future implies every
+        # earlier future of the flush is done (submit-order determinism
+        # even when groups completed out of order above)
+        restored: List[_Entry] = []
+        for e in entries:
+            if e.ticket in failed:
+                e.future._set_exception(failed[e.ticket])
+                restored.append(_Entry(e.ticket, e.request,
+                                       future=SpmmFuture(e.ticket)))
+            else:
+                out, m, n = results[e.ticket]
+                e.future._set_result(np.asarray(out)[:m, :n])
+        if restored:
+            with self._lock:
+                self._pending = restored + self._pending
+        wall = time.perf_counter() - t0
+        ok = [e for e in entries if e.ticket not in failed]
+        self._note_flush(len(ok), ctr, wall, pack_s, stall_s,
+                         failed=len(restored),
+                         flops=sum(e.request.a.problem_size_flop(
+                             e.request.b.shape[1]) for e in ok))
+
+    # -- stats ---------------------------------------------------------------
+
+    def _note_flush(self, n_ok: int, ctr: _FlushCounters, wall: float,
+                    pack_s: float, stall_s: float, failed: int,
+                    flops: float) -> None:
+        overlap = max(0.0, pack_s - stall_s)
+        hidden = min(1.0, overlap / pack_s) if pack_s > 0 else 0.0
+        with self._lock:
+            st = self.stats
+            st["requests"] += n_ok
+            st["groups"] += ctr.groups
+            st["dispatches"] += ctr.dispatches
+            st["batched_requests"] += ctr.batched
+            st["streamed"] += ctr.streamed
+            st["window_dispatches"] += ctr.window_disp
+            st["peak_payload_bytes"] = max(st["peak_payload_bytes"], ctr.peak)
+            st["failed"] += failed
+            st["flushes"] += 1
+            st["wall_s"] += wall
+            st["preprocess_s"] += pack_s
+            st["overlap_s"] += overlap
+            st["pack_stall_s"] += stall_s
+            st["flops"] += flops
+            st["last_flush"] = {
+                "requests": n_ok,
+                "groups": ctr.groups,
+                "dispatches": ctr.dispatches,
+                "batched_requests": ctr.batched,
+                "streamed": ctr.streamed,
+                "window_dispatches": ctr.window_disp,
+                "failed": failed,
+                "wall_s": wall,
+                "preprocess_s": pack_s,
+                "overlap_s": overlap,
+                "pack_stall_s": stall_s,
+                "pack_hidden_fraction": hidden,
+            }
 
     # -- reporting ----------------------------------------------------------
 
@@ -320,12 +631,21 @@ class SpmmScheduler:
         n = self.stats["requests"]
         return self.stats["dispatches"] / n if n else 0.0
 
+    @property
+    def pack_hidden_fraction(self) -> float:
+        """Fraction of host pack time hidden behind the pipeline (async
+        mode; 0.0 when packing is fully serialized with execution)."""
+        p = self.stats["preprocess_s"]
+        return min(1.0, self.stats["overlap_s"] / p) if p > 0 else 0.0
+
 
 def serve_spmm_requests(
     requests: Sequence[SpmmRequest],
     engine: Optional[SextansEngine] = None,
     *,
     batched: bool = True,
+    async_pipeline: bool = False,
+    pack_threads: Optional[int] = None,
     max_group: int = 64,
     device_bytes: Optional[int] = None,
     window_chunk: Optional[int] = None,
@@ -336,15 +656,22 @@ def serve_spmm_requests(
     bucket-mates are stacked into group dispatches, and — with
     ``device_bytes`` set — oversized requests ride the out-of-core
     streaming lane instead of pinning their full payload on device.
-    ``batched=False`` keeps the sequential one-dispatch-per-request loop
-    (baseline).
+    ``async_pipeline=True`` serves through the scheduler's futures-based
+    pack/execute pipeline (implies the batched grouping): host packing
+    runs on ``pack_threads`` workers and overlaps device execution;
+    results are bit-identical to the synchronous batched path and come
+    back in submit order.  ``batched=False`` keeps the sequential
+    one-dispatch-per-request loop (baseline).
 
     Stats report the HFlex executable-cache hit rate, the grouping
     behaviour (``groups``, ``batched_fraction``, ``dispatches_per_request``),
     the streaming lane (``streamed``, ``window_dispatches``,
-    ``peak_payload_bytes``) and both ``gflops`` (wall clock including
-    ``pack()`` preprocessing) and ``compute_gflops`` (wall − preprocess —
-    the paper reports execution separately from preprocessing).
+    ``peak_payload_bytes``), the pipeline overlap (``overlap_s``,
+    ``pack_hidden_fraction`` — zero outside async mode) and both
+    ``gflops`` (wall clock including ``pack()`` preprocessing) and
+    ``compute_gflops`` (wall − *non-hidden* preprocessing — the paper
+    reports execution separately from preprocessing; hidden pack time IS
+    execution-overlapped time).
     """
     from repro.sparse_api import PLAN_STATS
 
@@ -353,8 +680,34 @@ def serve_spmm_requests(
     streamed = 0
     window_dispatches = 0
     peak_payload = 0
+    overlap_s = 0.0
+    pack_hidden_fraction = 0.0
 
-    if batched:
+    if async_pipeline:
+        sched = SpmmScheduler(engine, max_group=max_group,
+                              device_bytes=device_bytes,
+                              window_chunk=window_chunk,
+                              async_pipeline=True,
+                              pack_threads=pack_threads)
+        try:
+            t0 = time.perf_counter()
+            futs = [sched.submit(r) for r in requests]
+            sched.flush()
+            outs = [f.result() for f in futs]
+            wall = time.perf_counter() - t0
+        finally:
+            sched.shutdown()
+        pack_s = sched.stats["preprocess_s"]
+        flops = sched.stats["flops"]
+        groups = sched.stats["groups"]
+        batched_fraction = sched.batched_fraction
+        dispatches_per_request = sched.dispatches_per_request
+        streamed = sched.stats["streamed"]
+        window_dispatches = sched.stats["window_dispatches"]
+        peak_payload = sched.stats["peak_payload_bytes"]
+        overlap_s = sched.stats["overlap_s"]
+        pack_hidden_fraction = sched.pack_hidden_fraction
+    elif batched:
         sched = SpmmScheduler(engine, max_group=max_group,
                               device_bytes=device_bytes,
                               window_chunk=window_chunk)
@@ -413,8 +766,10 @@ def serve_spmm_requests(
         "requests": len(requests),
         "wall_s": wall,
         "preprocess_s": pack_s,
+        "overlap_s": overlap_s,
+        "pack_hidden_fraction": pack_hidden_fraction,
         "gflops": flops / max(wall, 1e-9) / 1e9,
-        "compute_gflops": flops / max(wall - pack_s, 1e-9) / 1e9,
+        "compute_gflops": flops / max(wall - (pack_s - overlap_s), 1e-9) / 1e9,
         "groups": groups,
         "batched_fraction": batched_fraction,
         "dispatches_per_request": dispatches_per_request,

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import threading
 from typing import Callable, Dict, FrozenSet, List, Optional
 
 import jax
@@ -51,8 +52,19 @@ __all__ = [
 # Incremented once per *trace* of a backend body (i.e. per compiled
 # executable, not per call) — the JAX analogue of the paper counting
 # avoided synthesis/place/route runs.  Tests assert alpha/beta sweeps do
-# not grow this.
+# not grow this.  The async serving pipeline traces from its dispatch
+# thread while the owning thread may trace too, so the bump is
+# lock-guarded (``bump_trace``).
 BACKEND_STATS: Dict[str, int] = {"traces": 0}
+
+_STATS_LOCK = threading.Lock()
+
+
+def bump_trace() -> None:
+    """Thread-safe ``BACKEND_STATS['traces'] += 1`` (called per trace of a
+    backend body, possibly from an async dispatch thread)."""
+    with _STATS_LOCK:
+        BACKEND_STATS["traces"] += 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -411,7 +423,7 @@ def _bsr_pallas(a: SparseTensor, b, c, alpha, beta, *, tn, interpret):
 
 
 def _backend_jnp(a, b, c, alpha, beta, **_unused):
-    BACKEND_STATS["traces"] += 1
+    bump_trace()
     if a.format is Format.HFLEX:
         return _hflex_jnp(a, b, c, alpha, beta)
     return _bsr_jnp(a, b, c, alpha, beta)
@@ -419,7 +431,7 @@ def _backend_jnp(a, b, c, alpha, beta, **_unused):
 
 def _backend_pallas(a, b, c, alpha, beta, *, gather="gather", tn=128,
                     interpret=None, **_unused):
-    BACKEND_STATS["traces"] += 1
+    bump_trace()
     if a.format is Format.HFLEX:
         return _hflex_pallas(a, b, c, alpha, beta, gather=gather, tn=tn,
                              interpret=interpret)
@@ -428,7 +440,7 @@ def _backend_pallas(a, b, c, alpha, beta, *, gather="gather", tn=128,
 
 def _backend_pallas_onehot(a, b, c, alpha, beta, *, tn=128, interpret=None,
                            **_unused):
-    BACKEND_STATS["traces"] += 1
+    bump_trace()
     return _hflex_pallas(a, b, c, alpha, beta, gather="onehot", tn=tn,
                          interpret=interpret)
 

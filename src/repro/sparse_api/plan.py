@@ -231,21 +231,27 @@ class SpmmPlan:
             self._values_slot = 0
 
             def traced(vals, cols_gg, rows_gg, b, c, alpha, beta):
-                _bk.BACKEND_STATS["traces"] += 1
+                _bk.bump_trace()
                 return _bk._hflex_flat_exec(vals, cols_gg, rows_gg, b, c,
                                             alpha, beta, m)
 
             self._traced = traced
         else:
-            # Generic payload plan: pass every device leaf of the packed
-            # format as an operand (so bucket-mates share the executable)
-            # and rebuild the tensor inside the trace.
+            # Generic payload plan: pass every leaf of the packed format as
+            # an operand (so bucket-mates share the executable) and rebuild
+            # the tensor inside the trace.  Host-resident leaves (numpy,
+            # from ``pack_hflex(device=False)`` / ``stack_hflex(device=
+            # False)``) are committed to the device HERE, exactly once — the
+            # plan owns the pack→device boundary, so worker-thread packing
+            # never touches the device and the hot loop never re-transfers.
             leaves, treedef = jax.tree_util.tree_flatten(a)
-            self._operands = tuple(leaves)
-            self._treedef = treedef
             vals_leaf = a.values
             self._values_slot = next(
                 i for i, leaf in enumerate(leaves) if leaf is vals_leaf)
+            self._operands = tuple(
+                x if isinstance(x, jax.Array) else jnp.asarray(x)
+                for x in leaves)
+            self._treedef = treedef
             backend_fn = _bk.get_backend(self.backend).fn
             opts_d = self.opts
 
@@ -426,14 +432,13 @@ class StreamingPlan:
 
         d = a.data
         # Host staging: the out-of-core contract — the full payload lives in
-        # host memory (near-zero-copy from CPU jax arrays), and only
-        # chunk-sized buffers are ever device_put.  The plan then drops
-        # every reference to the caller's device arrays (self.a is rebuilt
-        # over the host copies), so it pins no device payload of its own;
-        # on an accelerator the caller can delete the packed tensor after
-        # planning to actually free it (pack() itself still commits the
-        # payload to the default device first — host-resident packing is a
-        # ROADMAP item).
+        # host memory (zero-copy for host-resident packs, near-zero-copy
+        # from CPU jax arrays), and only chunk-sized buffers are ever
+        # device_put.  The plan then drops every reference to the caller's
+        # device arrays (self.a is rebuilt over the host copies), so it
+        # pins no device payload of its own.  True out-of-core on a real
+        # accelerator packs with ``pack_hflex(device=False)``: the payload
+        # is numpy end to end and never touches the device at all.
         self._vals_h = np.asarray(d.vals)
         self._cols_h = np.asarray(d.cols)
         self._rows_h = np.asarray(d.rows)

@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.hflex import BlockSlabs, bucket_geometry, pack_block_slabs
+from repro.core.hflex import pack_block_slabs
 from repro.core.partition import cdiv
 from repro.core.sparse import SparseMatrix
 from repro.core.sparse import from_dense as _coo_from_dense
@@ -142,31 +142,31 @@ def pack_hflex(
     chunk: int = 8,
     interleave: bool = True,
     bucket: bool = False,
+    device: bool = True,
 ) -> PackedSpMM:
-    """Host preprocessing -> device slab arrays. ``bucket=True`` rounds LW up
+    """Host preprocessing -> packed slab arrays. ``bucket=True`` rounds LW up
     to a power of two so matrices of similar density share one compiled
-    kernel (HFlex compile-cache)."""
-    slabs = pack_block_slabs(a, tm=tm, k0=k0, chunk=chunk, interleave=interleave)
-    lw = slabs.lw
-    if bucket:
-        _, _, lw_b, _ = bucket_geometry(slabs.mb, slabs.nw, slabs.lw, 1)
-        if lw_b > lw:
-            pad = lw_b - lw
-            slabs = BlockSlabs(
-                m=slabs.m, k=slabs.k, tm=tm, k0=k0, chunk=chunk,
-                vals=np.pad(slabs.vals, ((0, 0), (0, 0), (0, pad))),
-                cols=np.pad(slabs.cols, ((0, 0), (0, 0), (0, pad))),
-                rows=np.pad(slabs.rows, ((0, 0), (0, 0), (0, pad))),
-                q=slabs.q, nnz=slabs.nnz, nse=slabs.nse,
-            )
+    kernel (HFlex compile-cache).
+
+    ``device=False`` returns **host-resident** (numpy) slab leaves instead
+    of committing the payload to the default device: worker threads can
+    pack without touching the device, and a payload larger than device
+    memory never OOMs at pack time — the plan tier
+    (:class:`repro.sparse_api.SpmmPlan` / ``StreamingPlan``) owns the
+    single ``device_put`` at dispatch.  The packed *values* are identical
+    either way, so downstream results are bit-identical.
+    """
+    slabs = pack_block_slabs(a, tm=tm, k0=k0, chunk=chunk,
+                             interleave=interleave, bucket=bucket)
     nse = slabs.nse if slabs.nse is not None else np.minimum(
         (slabs.vals != 0).sum(-1), slabs.q)
+    conv = jnp.asarray if device else np.asarray
     return PackedSpMM(
-        vals=jnp.asarray(slabs.vals),
-        cols=jnp.asarray(slabs.cols),
-        rows=jnp.asarray(slabs.rows),
-        q=jnp.asarray(slabs.q),
-        nse=jnp.asarray(nse, jnp.int32),
+        vals=conv(slabs.vals),
+        cols=conv(slabs.cols),
+        rows=conv(slabs.rows),
+        q=conv(slabs.q),
+        nse=conv(np.asarray(nse, np.int32)),
         m=slabs.m, k=slabs.k, tm=tm, k0=k0, chunk=chunk,
         interleaved=bool(getattr(slabs, "interleaved", interleave and slabs.mb > 1)),
         nnz=slabs.nnz,
@@ -174,11 +174,14 @@ def pack_hflex(
 
 
 def pack_bsr_weight(
-    w: np.ndarray, tk: int = 128, tf: int = 128, threshold: float = 0.0
+    w: np.ndarray, tk: int = 128, tf: int = 128, threshold: float = 0.0,
+    device: bool = True,
 ) -> BsrWeight:
     """Pack a dense (K, F) weight into BSR, dropping all-(|w|<=threshold)
     blocks. Blocks sorted by block-col then block-row (CSC-ish over output
-    tiles, matching the kernel's pointer walk)."""
+    tiles, matching the kernel's pointer walk).  ``device=False`` keeps the
+    tile payload host-resident (numpy leaves) — the BSR twin of
+    ``pack_hflex(device=False)``."""
     w = np.asarray(w)
     k, f = w.shape
     if k % tk or f % tf:
@@ -192,10 +195,11 @@ def pack_bsr_weight(
     blocks = wb[br, bc]                                     # (NB, tk, tf)
     indptr = np.zeros(nbf + 1, np.int32)
     np.cumsum(np.bincount(bc, minlength=nbf), out=indptr[1:])
+    conv = jnp.asarray if device else np.asarray
     return BsrWeight(
-        blocks=jnp.asarray(blocks.astype(np.float32)),
-        brow=jnp.asarray(br.astype(np.int32)),
-        indptr=jnp.asarray(indptr),
+        blocks=conv(np.ascontiguousarray(blocks, np.float32)),
+        brow=conv(br.astype(np.int32)),
+        indptr=conv(indptr),
         k=k, f=f, tk=tk, tf=tf,
     )
 
@@ -281,6 +285,24 @@ class SparseTensor:
         """
         leaves = jax.tree_util.tree_leaves(self.data)
         return int(sum(x.nbytes for x in leaves))
+
+    @property
+    def on_host(self) -> bool:
+        """True when every packed payload leaf is host-resident (numpy) —
+        the product of ``pack_hflex(device=False)`` /
+        ``stack_hflex(device=False)``.  Host-resident tensors are safe to
+        build on worker threads and never pin device memory; the plan tier
+        performs the single ``device_put`` at dispatch."""
+        return all(isinstance(x, np.ndarray)
+                   for x in jax.tree_util.tree_leaves(self.data))
+
+    def to_device(self) -> "SparseTensor":
+        """Commit a host-resident payload to the default device (one
+        transfer per leaf); a no-op for already-device tensors."""
+        if not self.on_host:
+            return self
+        data = jax.tree_util.tree_map(jnp.asarray, self.data)
+        return dataclasses.replace(self, data=data)
 
     @property
     def values(self) -> jax.Array:
@@ -434,16 +456,20 @@ def from_sparse_matrix(
     bucket: bool = True,
     block: Tuple[int, int] = (128, 128),
     threshold: float = 0.0,
+    device: bool = True,
 ) -> SparseTensor:
-    """Pack a host COO :class:`SparseMatrix` into a device SparseTensor."""
+    """Pack a host COO :class:`SparseMatrix` into a packed SparseTensor
+    (device-resident by default; ``device=False`` keeps numpy leaves —
+    see :func:`pack_hflex`)."""
     if format is Format.HFLEX:
         packed = pack_hflex(a, tm=tm, k0=k0, chunk=chunk,
-                            interleave=interleave, bucket=bucket)
+                            interleave=interleave, bucket=bucket,
+                            device=device)
         return SparseTensor(data=packed, format=Format.HFLEX, shape=a.shape)
     from repro.core.sparse import to_dense
 
     return from_dense(to_dense(a), format=Format.BSR, block=block,
-                      threshold=threshold)
+                      threshold=threshold, device=device)
 
 
 def from_coo(
@@ -470,6 +496,7 @@ def from_dense(
     *,
     block: Tuple[int, int] = (128, 128),
     threshold: float = 0.0,
+    device: bool = True,
     **kwargs,
 ) -> SparseTensor:
     """Build from a dense (M, K) array; zeros (or, for BSR, all-zero tiles)
@@ -478,13 +505,14 @@ def from_dense(
     if a.ndim != 2:
         raise ValueError("from_dense expects a 2-D matrix")
     if format is Format.HFLEX:
-        return from_sparse_matrix(_coo_from_dense(a), format=format, **kwargs)
+        return from_sparse_matrix(_coo_from_dense(a), format=format,
+                                  device=device, **kwargs)
     m, k = a.shape
     bm, bk = block
     mpad, kpad = cdiv(m, bm) * bm, cdiv(k, bk) * bk
     at = np.zeros((kpad, mpad), np.float32)
     at[:k, :m] = a.T.astype(np.float32)
-    w = pack_bsr_weight(at, tk=bk, tf=bm, threshold=threshold)
+    w = pack_bsr_weight(at, tk=bk, tf=bm, threshold=threshold, device=device)
     # stored cells inside the logical bounds (edge tiles are part-padding)
     brow = np.asarray(w.brow)
     bcol = np.searchsorted(np.asarray(w.indptr), np.arange(brow.shape[0]),
@@ -494,7 +522,7 @@ def from_dense(
     return SparseTensor(data=w, format=Format.BSR, shape=(m, k), nse=nse)
 
 
-def stack_hflex(tensors) -> SparseTensor:
+def stack_hflex(tensors, device: bool = True) -> SparseTensor:
     """Stack G same-geometry HFLEX tensors into one batched SparseTensor.
 
     The members must be *bucket-mates*: identical executable geometry
@@ -508,6 +536,12 @@ def stack_hflex(tensors) -> SparseTensor:
 
     Round trip: ``stack_hflex(ts).unstack()`` recovers the members
     (per-member ``nnz`` is rebuilt from the true slab counts ``nse``).
+
+    ``device=False`` keeps the stacked payload **host-resident** (numpy
+    leaves): the async serving pipeline's pack stage stacks groups on
+    worker threads without ever touching the device — the plan tier
+    performs the single ``device_put`` at dispatch.  Stacked values are
+    identical either way (host stack is a plain ``np.stack``).
     """
     ts = list(tensors)
     if not ts:
@@ -531,12 +565,20 @@ def stack_hflex(tensors) -> SparseTensor:
                 f"shape mismatch: {t.shape} != {t0.shape} — embed ragged "
                 f"members in a common (M, K) bounding shape before stacking")
     d0 = t0.data
-    if jax.default_backend() == "cpu":
+
+    def _stack_host(xs):
+        return np.stack([np.asarray(x) for x in xs])
+
+    if not device:
+        _stack = _stack_host                   # host-resident pack stage
+    elif jax.default_backend() == "cpu" or all(t.on_host for t in ts):
         # Host stack + one transfer per field: ~5x faster than jnp.stack on
         # CPU (np.asarray of a CPU jax array is near-zero-copy), bit-exact.
-        # On an accelerator the payloads are device-resident — stack there.
+        # Host-resident members stack on the host too (one transfer total
+        # instead of G per field).  Device-resident payloads on an
+        # accelerator stack there.
         def _stack(xs):
-            return jnp.asarray(np.stack([np.asarray(x) for x in xs]))
+            return jnp.asarray(_stack_host(xs))
     else:
         _stack = jnp.stack
     stacked = PackedSpMM(

@@ -1,0 +1,461 @@
+"""Async serving pipeline tests.
+
+Covers the futures-based scheduler (``SpmmScheduler(async_pipeline=True)``):
+submit-order result determinism under out-of-order group completion,
+worker-exception propagation into the owning future + queue restoration,
+and a mixed pool (group + singleton + streaming lane) through one async
+flush, bit-identical to the synchronous path.  Also pins the host-resident
+packing mode the pipeline is built on: ``pack_hflex(device=False)`` (and
+the BSR twin) produce numpy leaves, plans own the single device_put, and
+the streaming tier runs end to end on a payload that never touched the
+device at pack time.
+"""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.sparse_api as sp
+from repro.core.async_pipeline import SpmmFuture, pack_thread_count
+from repro.core.engine import SextansEngine
+from repro.core.sparse import (SparseMatrix, power_law_sparse, random_sparse,
+                               spmm_reference)
+from repro.launch.serve import SpmmRequest, SpmmScheduler, serve_spmm_requests
+
+
+def _engine():
+    return SextansEngine(tm=64, k0=64, chunk=8, impl="jnp")
+
+
+def _mixed_pool(rng, with_big=True):
+    """Bucket-mates (ragged N) + odd-geometry singletons + one oversized
+    request for the streaming lane."""
+    reqs = []
+    for i in range(6):
+        a = power_law_sparse(256, 200, 5, seed=i)
+        n = 12 if i % 2 else 16                 # both pad to the N=16 bucket
+        reqs.append(SpmmRequest(
+            a=a, b=rng.standard_normal((200, n)).astype(np.float32)))
+    for i in range(2):
+        a = random_sparse(100 + 30 * i, 150, 0.03, seed=50 + i)
+        reqs.append(SpmmRequest(
+            a=a, b=rng.standard_normal((150, 16)).astype(np.float32),
+            c=np.ones((a.shape[0], 16), np.float32), alpha=1.5, beta=0.5))
+    if with_big:
+        big = power_law_sparse(256, 2048, 6, seed=99)
+        reqs.append(SpmmRequest(
+            a=big, b=rng.standard_normal((2048, 16)).astype(np.float32)))
+    return reqs
+
+
+def _big_cap(reqs):
+    probe = _engine()
+    return probe.pack(reqs[-1].a).nbytes // 3
+
+
+# ---------------------------------------------------------------------------
+# Host-resident packing (the pack stage the pipeline is built on)
+# ---------------------------------------------------------------------------
+
+
+class TestHostResidentPacking:
+    def test_pack_hflex_device_false_numpy_leaves(self):
+        a = power_law_sparse(256, 200, 5, seed=0)
+        th = sp.from_sparse_matrix(a, tm=64, k0=64, chunk=8, bucket=True,
+                                   device=False)
+        td = sp.from_sparse_matrix(a, tm=64, k0=64, chunk=8, bucket=True)
+        assert th.on_host and not td.on_host
+        for leaf in jax.tree_util.tree_leaves(th.data):
+            assert isinstance(leaf, np.ndarray)
+        # same geometry, same packed values — residency is the only delta
+        assert th.geometry == td.geometry
+        assert np.array_equal(np.asarray(th.data.vals),
+                              np.asarray(td.data.vals))
+        assert np.array_equal(np.asarray(th.data.q), np.asarray(td.data.q))
+
+    def test_plan_owns_single_device_put(self, rng):
+        a = power_law_sparse(256, 200, 5, seed=1)
+        th = sp.from_sparse_matrix(a, tm=64, k0=64, chunk=8, bucket=True,
+                                   device=False)
+        b = rng.standard_normal((200, 16)).astype(np.float32)
+        for backend, opts in (("jnp", {}),
+                              ("pallas", dict(tn=8, interpret=True))):
+            # bit-identity is per backend (pallas and jnp accumulate in
+            # different orders): host-packed plan vs device-packed spmm
+            ref = np.asarray(sp.spmm(th.to_device(), b, backend=backend,
+                                     **opts))
+            pl = sp.plan(th, 16, backend=backend, **opts)
+            # input stayed host-resident; the plan's operands are on device
+            assert th.on_host
+            assert all(isinstance(x, jax.Array) for x in pl._operands)
+            assert np.array_equal(np.asarray(pl.run(b)), ref)
+
+    def test_streaming_plan_host_packed_end_to_end(self, rng):
+        # the ROADMAP gap this PR closes: a payload that never existed on
+        # device streams through the out-of-core tier bit-identically
+        a = power_law_sparse(256, 1024, 6, seed=2)
+        th = sp.from_sparse_matrix(a, tm=64, k0=64, chunk=8, bucket=True,
+                                   device=False)
+        assert th.on_host
+        b = rng.standard_normal((1024, 8)).astype(np.float32)
+        resident = np.asarray(sp.plan(th, 8, backend="jnp").run(b))
+        spl = sp.plan(th, 8, backend="jnp", device_bytes=th.nbytes // 4)
+        assert isinstance(spl, sp.StreamingPlan)
+        assert np.array_equal(np.asarray(spl.run(b)), resident)
+
+    def test_stack_hflex_device_false(self, rng):
+        mats = [power_law_sparse(256, 200, 5, seed=i) for i in range(3)]
+        ts = [sp.from_sparse_matrix(m, tm=64, k0=64, chunk=8, bucket=True,
+                                    device=False) for m in mats]
+        s = sp.stack_hflex(ts, device=False)
+        assert s.on_host and s.batch == 3
+        b = rng.standard_normal((3, 200, 8)).astype(np.float32)
+        y = np.asarray(sp.spmm(s.to_device(), b, backend="jnp"))
+        for i in range(3):
+            yi = np.asarray(sp.spmm(ts[i].to_device(), b[i], backend="jnp"))
+            assert np.array_equal(y[i], yi)
+
+    def test_bsr_twin_device_false(self, rng):
+        w = rng.standard_normal((64, 96)).astype(np.float32)
+        bh = sp.from_dense(w, format=sp.Format.BSR, block=(32, 32),
+                           device=False)
+        bd = sp.from_dense(w, format=sp.Format.BSR, block=(32, 32))
+        assert bh.on_host and not bd.on_host
+        x = rng.standard_normal((96, 8)).astype(np.float32)
+        ref = np.asarray(sp.spmm(bd, x, backend="jnp"))
+        got = np.asarray(sp.plan(bh, 8, backend="jnp").run(x))
+        assert np.array_equal(got, ref)
+
+    def test_engine_pack_device_false(self):
+        eng = _engine()
+        a = power_law_sparse(128, 128, 5, seed=3)
+        t = eng.pack(a, device=False)
+        assert t.on_host
+        assert eng.stats.packs == 1
+
+
+# ---------------------------------------------------------------------------
+# The async scheduler
+# ---------------------------------------------------------------------------
+
+
+class TestAsyncScheduler:
+    def test_mixed_pool_bit_identical_and_ordered(self, rng):
+        """Group + singleton + streaming lane through ONE async flush:
+        results bit-identical to the synchronous scheduler, futures in
+        submit order, overlap stats well-formed."""
+        reqs = _mixed_pool(rng)
+        cap = _big_cap(reqs)
+
+        sync = SpmmScheduler(_engine(), device_bytes=cap)
+        for r in reqs:
+            sync.submit(r)
+        ref = sync.flush()
+
+        with SpmmScheduler(_engine(), device_bytes=cap,
+                           async_pipeline=True) as sched:
+            futs = [sched.submit(r) for r in reqs]
+            assert all(isinstance(f, SpmmFuture) for f in futs)
+            assert [f.ticket for f in futs] == list(range(len(reqs)))
+            ret = sched.flush()
+            assert ret == futs                  # same objects, same order
+            outs = [f.result(timeout=120) for f in futs]
+
+        for i, (x, y) in enumerate(zip(ref, outs)):
+            assert np.array_equal(x, y), f"async diverged at request {i}"
+
+        st = sched.stats
+        assert st["requests"] == len(reqs)
+        assert st["streamed"] == 1
+        assert st["batched_requests"] >= 6      # the mates rode a group
+        assert st["failed"] == 0
+        assert st["preprocess_s"] > 0
+        assert 0.0 <= sched.pack_hidden_fraction <= 1.0
+        lf = st["last_flush"]
+        assert lf["requests"] == len(reqs)
+        assert 0.0 <= lf["pack_hidden_fraction"] <= 1.0
+        # dispatch accounting matches the sync convention
+        assert st["dispatches"] == sync.stats["dispatches"]
+        assert st["groups"] == sync.stats["groups"]
+
+    def test_submit_order_determinism_out_of_order_completion(self, rng):
+        """Delay the FIRST group's pack so a later group dispatches first:
+        futures must still resolve in submit order (done flags always form
+        a prefix) with bit-identical results."""
+
+        class SlowFirstGroup(SpmmScheduler):
+            def _prep_group(self, key, chunk):
+                if any(e.ticket == 0 for e in chunk):
+                    time.sleep(0.25)
+                return super()._prep_group(key, chunk)
+
+        reqs = []
+        for i in range(3):                      # family A -> tickets 0..2
+            a = power_law_sparse(256, 200, 5, seed=i)
+            reqs.append(SpmmRequest(
+                a=a, b=rng.standard_normal((200, 16)).astype(np.float32)))
+        for i in range(3):                      # family B -> tickets 3..5
+            a = power_law_sparse(320, 260, 5, seed=10 + i)
+            reqs.append(SpmmRequest(
+                a=a, b=rng.standard_normal((260, 16)).astype(np.float32)))
+
+        sync = SpmmScheduler(_engine())
+        for r in reqs:
+            sync.submit(r)
+        ref = sync.flush()
+        assert sync.stats["groups"] == 2        # two distinct bucket groups
+
+        with SlowFirstGroup(_engine(), async_pipeline=True) as sched:
+            futs = [sched.submit(r) for r in reqs]
+            sched.flush()
+            deadline = time.time() + 120
+            while True:
+                done = [f.done() for f in futs]
+                if False in done:
+                    # no later future may be done before an earlier one
+                    assert not any(done[done.index(False):]), done
+                else:
+                    break
+                assert time.time() < deadline, "async flush stalled"
+                time.sleep(0.002)
+            outs = [f.result() for f in futs]
+        for x, y in zip(ref, outs):
+            assert np.array_equal(x, y)
+        assert sched.stats["batched_requests"] == 6
+
+    def test_worker_exception_propagates_and_restores_queue(self, rng):
+        """A pack-worker exception resolves the owning future (not
+        swallowed), the other requests still execute, and the failed
+        request is restored to the queue for retry/cancel — the async
+        analogue of the synchronous flush's queue restoration."""
+        good = [SpmmRequest(
+            a=power_law_sparse(128, 128, 5, seed=i),
+            b=rng.standard_normal((128, 8)).astype(np.float32))
+            for i in range(3)]
+        bad = SpmmRequest(                       # col 200 >= K=128: pack
+            a=SparseMatrix((128, 128),           # validation fails on the
+                           np.array([0], np.int32),      # worker thread
+                           np.array([200], np.int32),
+                           np.array([1.0], np.float32)),
+            b=rng.standard_normal((128, 8)).astype(np.float32))
+
+        sched = SpmmScheduler(_engine(), async_pipeline=True)
+        try:
+            f0 = sched.submit(good[0])
+            fbad = sched.submit(bad)
+            f2 = sched.submit(good[1])
+            sched.flush()
+            # healthy requests resolve normally, in order
+            y0 = f0.result(timeout=120)
+            y2 = f2.result(timeout=120)
+            ref0 = spmm_reference(good[0].a, good[0].b,
+                                  np.zeros_like(y0))
+            np.testing.assert_allclose(y0, ref0, rtol=2e-4,
+                                       atol=2e-4 * np.abs(ref0).max())
+            assert y2.shape == (128, 8)
+            # the worker exception lands in the owning future
+            with pytest.raises(ValueError, match="col index"):
+                fbad.result(timeout=120)
+            assert isinstance(fbad.exception(), ValueError)
+            # ... and the failed request is back in the queue
+            assert sched.pending == 1
+            assert sched.stats["failed"] == 1
+            assert sched.stats["requests"] == 2  # only the served ones
+            # the caller drops it and the scheduler keeps working
+            assert sched.cancel(fbad.ticket) is True
+            assert sched.pending == 0
+            f3 = sched.submit(good[2])
+            sched.flush()
+            assert f3.result(timeout=120).shape == (128, 8)
+        finally:
+            sched.shutdown()
+
+    def test_flush_n_plus_1_packs_while_flush_n_computes(self, rng):
+        """Two back-to-back non-blocking flushes: the second batch's packs
+        start while the first flush is still in the dispatch stage; both
+        resolve correctly and per-flush stats stay scoped."""
+        with SpmmScheduler(_engine(), async_pipeline=True) as sched:
+            batch1 = [SpmmRequest(
+                a=power_law_sparse(256, 200, 5, seed=i),
+                b=rng.standard_normal((200, 16)).astype(np.float32))
+                for i in range(4)]
+            futs1 = [sched.submit(r) for r in batch1]
+            sched.flush()                        # non-blocking
+            batch2 = [SpmmRequest(
+                a=power_law_sparse(256, 200, 5, seed=20 + i),
+                b=rng.standard_normal((200, 16)).astype(np.float32))
+                for i in range(4)]
+            futs2 = [sched.submit(r) for r in batch2]
+            sched.flush()
+            for r, f in zip(batch1 + batch2, futs1 + futs2):
+                y = f.result(timeout=120)
+                ref = spmm_reference(r.a, r.b, np.zeros_like(y))
+                np.testing.assert_allclose(
+                    y, ref, rtol=2e-4, atol=2e-4 * np.abs(ref).max())
+            assert sched.stats["flushes"] == 2
+            assert sched.stats["last_flush"]["requests"] == 4
+
+    def test_empty_flush_and_cancel_missing(self):
+        with SpmmScheduler(_engine(), async_pipeline=True) as sched:
+            assert sched.flush() == []
+            assert sched.cancel(123) is False
+
+    def test_shutdown_right_after_flush_resolves_futures(self, rng):
+        """shutdown(wait=True) immediately after a non-blocking flush must
+        drain the dispatch stage (which still submits group-stack packs)
+        before closing the pack pool — a wrong join order strands the
+        flush's futures unresolved."""
+        sched = SpmmScheduler(_engine(), async_pipeline=True)
+        futs = [sched.submit(SpmmRequest(
+            a=power_law_sparse(256, 200, 5, seed=i),
+            b=rng.standard_normal((200, 16)).astype(np.float32)))
+            for i in range(4)]
+        sched.flush()
+        sched.shutdown(wait=True)          # must not deadlock or strand
+        assert all(f.done() for f in futs)
+        for f in futs:
+            assert f.result(timeout=1).shape == (256, 16)
+
+    def test_coordinator_failure_resolves_and_restores(self, rng):
+        """An exception escaping the flush coordinator itself (not a
+        per-request pack/dispatch error) must still resolve every future
+        and restore the batch — never strand callers in result()."""
+
+        class BrokenRoute(SpmmScheduler):
+            def _route(self, e, groups, stream_lane):
+                raise RuntimeError("coordinator blew up")
+
+        sched = BrokenRoute(_engine(), async_pipeline=True)
+        try:
+            futs = [sched.submit(SpmmRequest(
+                a=power_law_sparse(128, 128, 5, seed=i),
+                b=rng.standard_normal((128, 8)).astype(np.float32)))
+                for i in range(2)]
+            sched.flush()
+            for f in futs:
+                with pytest.raises(RuntimeError, match="coordinator"):
+                    f.result(timeout=120)
+            assert sched.pending == 2       # whole batch restored
+            assert sched.stats["failed"] == 2
+        finally:
+            sched.shutdown()
+
+    def test_sync_mode_reports_zero_overlap(self, rng):
+        """Synchronous flush serializes pack with execution: overlap_s
+        must stay 0 and pack_hidden_fraction 0.0 (regression: stall was
+        once reported as 0, making ALL sync pack time look hidden)."""
+        sched = SpmmScheduler(_engine())
+        sched.submit(SpmmRequest(
+            a=power_law_sparse(128, 128, 5, seed=0),
+            b=rng.standard_normal((128, 8)).astype(np.float32)))
+        sched.flush()
+        assert sched.stats["preprocess_s"] > 0
+        assert sched.stats["overlap_s"] == 0.0
+        assert sched.pack_hidden_fraction == 0.0
+        assert sched.stats["last_flush"]["pack_hidden_fraction"] == 0.0
+
+    def test_sync_mode_unchanged(self, rng):
+        """Synchronous submit still returns int tickets and flush returns
+        arrays — the PR-3/PR-4 contract."""
+        sched = SpmmScheduler(_engine())
+        t = sched.submit(SpmmRequest(
+            a=power_law_sparse(128, 128, 5, seed=0),
+            b=rng.standard_normal((128, 8)).astype(np.float32)))
+        assert isinstance(t, int)
+        outs = sched.flush()
+        assert isinstance(outs, list) and isinstance(outs[0], np.ndarray)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level async path + serve wrapper
+# ---------------------------------------------------------------------------
+
+
+class TestEngineAsync:
+    def test_spmm_async_bit_identical(self, rng):
+        eng = _engine()
+        try:
+            a = power_law_sparse(256, 200, 5, seed=0)
+            b = rng.standard_normal((200, 16)).astype(np.float32)
+            c = rng.standard_normal((256, 16)).astype(np.float32)
+            fut = eng.spmm_async(a, b, c, alpha=1.5, beta=-0.5)
+            got = np.asarray(fut.result(timeout=120))
+            ref = np.asarray(eng.spmm(eng.pack(a), b, c, 1.5, -0.5))
+            assert np.array_equal(got, ref)
+        finally:
+            eng.close()
+
+    def test_spmm_async_pipelines_in_order(self, rng):
+        eng = _engine()
+        try:
+            pairs = []
+            for i in range(5):
+                a = power_law_sparse(128, 128, 5, seed=i)
+                b = rng.standard_normal((128, 8)).astype(np.float32)
+                pairs.append((a, b, eng.spmm_async(a, b)))
+            for a, b, fut in pairs:
+                y = np.asarray(fut.result(timeout=120))
+                ref = spmm_reference(a, b, np.zeros_like(y))
+                np.testing.assert_allclose(
+                    y, ref, rtol=2e-4, atol=2e-4 * np.abs(ref).max())
+        finally:
+            eng.close()
+
+    def test_spmm_async_exception_to_future(self):
+        eng = _engine()
+        try:
+            bad = SparseMatrix((16, 16), np.array([0], np.int32),
+                               np.array([99], np.int32),
+                               np.array([1.0], np.float32))
+            fut = eng.spmm_async(bad, np.zeros((16, 4), np.float32))
+            with pytest.raises(ValueError, match="col index"):
+                fut.result(timeout=120)
+        finally:
+            eng.close()
+
+
+class TestServeAsync:
+    def test_serve_async_matches_batched(self, rng):
+        reqs = _mixed_pool(rng)
+        cap = _big_cap(reqs)
+        outs_b, st_b = serve_spmm_requests(reqs, _engine(), batched=True,
+                                           device_bytes=cap)
+        outs_a, st_a = serve_spmm_requests(reqs, _engine(),
+                                           async_pipeline=True,
+                                           device_bytes=cap)
+        for x, y in zip(outs_b, outs_a):
+            assert np.array_equal(x, y)
+        assert st_a["streamed"] == st_b["streamed"] == 1
+        assert st_a["batched_fraction"] == st_b["batched_fraction"]
+        assert st_a["dispatches_per_request"] == st_b["dispatches_per_request"]
+        assert 0.0 <= st_a["pack_hidden_fraction"] <= 1.0
+        assert st_a["overlap_s"] >= 0.0
+        # sync paths report zero overlap
+        assert st_b["overlap_s"] == 0.0
+        assert st_b["pack_hidden_fraction"] == 0.0
+
+
+class TestPipelinePrimitives:
+    def test_pack_thread_count_env(self, monkeypatch):
+        monkeypatch.setenv("SEXTANS_PACK_THREADS", "2")
+        assert pack_thread_count() == 2
+        assert pack_thread_count(7) == 7        # explicit beats env
+        monkeypatch.delenv("SEXTANS_PACK_THREADS")
+        assert pack_thread_count() >= 1
+
+    def test_future_timeout_and_repr(self):
+        f = SpmmFuture(5)
+        with pytest.raises(TimeoutError):
+            f.result(timeout=0.01)
+        assert "pending" in repr(f)
+        f._set_result(3)
+        assert f.done() and f.result() == 3 and f.exception() is None
+        assert "done" in repr(f)
+
+    def test_future_resolves_across_threads(self):
+        f = SpmmFuture(0)
+        threading.Timer(0.05, lambda: f._set_result("ok")).start()
+        assert f.result(timeout=5) == "ok"
