@@ -362,6 +362,53 @@ def bench_stream() -> None:
              })
 
 
+def bench_validate() -> None:
+    """Run the ``repro.analysis`` invariant validator over every packed
+    artifact family the benchmarks dispatch (kernel/plan slabs, streaming
+    slabs + a window slice, the serving bucket group, BSR, PE streams) and
+    report the validation overhead per artifact — the cost of running with
+    ``SEXTANS_CHECK=1``."""
+    import repro.sparse_api as sp
+    from repro.analysis.validate import validate
+    from repro.core.hflex import pack_pe_streams
+    from repro.core.partition import SextansParams
+    from repro.core.sparse import power_law_sparse, to_dense
+
+    kern = sp.from_sparse_matrix(power_law_sparse(512, 512, 6, seed=1),
+                                 tm=128, k0=128, chunk=8, bucket=True)
+    big = sp.from_sparse_matrix(power_law_sparse(1024, 8192, 6, seed=3),
+                                tm=128, k0=128, chunk=8, bucket=True)
+    group = sp.stack_hflex([
+        sp.from_sparse_matrix(power_law_sparse(512, 512, 5, seed=i),
+                              tm=128, k0=128, chunk=8, bucket=True)
+        for i in range(4)])
+    dense = to_dense(power_law_sparse(256, 256, 4, seed=7))
+    bsr = sp.from_dense(np.asarray(dense, np.float32),
+                        format=sp.Format.BSR, block=(64, 64))
+    streams = pack_pe_streams(power_law_sparse(2000, 2000, 6, seed=2),
+                              SextansParams(K0=512, P=16, D=10))
+    artifacts = [
+        ("kernel_slabs_512", kern),
+        ("stream_slabs_1024x8192", big),
+        ("stream_window_slice", big.windows(0, 4)),
+        ("serve_bucket_group", group),
+        ("bsr_weight_256", bsr),
+        ("pe_streams_2000", streams),
+    ]
+    total_us = 0.0
+    for name, art in artifacts:
+        t0 = time.perf_counter()
+        validate(art)
+        us = (time.perf_counter() - t0) * 1e6
+        total_us += us
+        _row(f"validate_{name}", us, "invariants_ok")
+    _row("validate_overhead_total", total_us,
+         f"{len(artifacts)}artifacts_SEXTANS_CHECK_cost",
+         extra={"artifacts": len(artifacts),
+                "total_us": total_us,
+                "per_artifact_us": total_us / len(artifacts)})
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", choices=("small", "full"), default="small")
@@ -370,7 +417,16 @@ def main() -> None:
     ap.add_argument("--only", metavar="SUBSTR", default=None,
                     help="run only benchmark sections whose name contains "
                          "SUBSTR (e.g. --only serve)")
+    ap.add_argument("--validate", action="store_true",
+                    help="set SEXTANS_CHECK=1 for the whole run (every "
+                         "benchmark input is invariant-checked at plan/"
+                         "dispatch time) and append validate_* overhead "
+                         "rows")
     args, _ = ap.parse_known_args()
+    if args.validate:
+        import os
+
+        os.environ["SEXTANS_CHECK"] = "1"
     sections = [
         ("table1", bench_table1),
         ("fig7", lambda: bench_fig7(args.budget)),
@@ -382,6 +438,8 @@ def main() -> None:
         ("serve", bench_serve),
         ("stream", bench_stream),
     ]
+    if args.validate:
+        sections.append(("validate", bench_validate))
     print("name,us_per_call,derived")
     for name, fn in sections:
         if args.only and args.only not in name:

@@ -1,0 +1,27 @@
+"""Repo-specific static analysis + runtime invariant checking.
+
+Two halves:
+
+* ``repro.analysis.engine`` / ``repro.analysis.rules`` — an AST lint pass
+  (``python -m repro.analysis src tests``) carrying rules for the bug
+  classes PRs 3-5 actually hit: trace-key recompile hazards, host/device
+  boundary violations, lock discipline, and donated-buffer reuse.
+* ``repro.analysis.validate`` — a runtime validator for packed artifacts
+  (HFlex slabs, stacked groups, window slices, PE streams, schedules),
+  callable explicitly, at plan time under ``SEXTANS_CHECK=1``, and from
+  tests via the ``sextans_check`` conftest fixture.
+
+The linter half deliberately imports neither jax nor numpy so it can run
+in a bare CI interpreter; the validator half is imported lazily.
+"""
+from .engine import (  # noqa: F401
+    Finding,
+    RULES,
+    analyze_file,
+    analyze_paths,
+    iter_python_files,
+)
+from . import rules as _rules  # noqa: F401  (registers the built-in rules)
+
+__all__ = ["Finding", "RULES", "analyze_file", "analyze_paths",
+           "iter_python_files"]

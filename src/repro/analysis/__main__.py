@@ -1,0 +1,52 @@
+"""CLI: ``python -m repro.analysis [paths ...] [--json [FILE]]``.
+
+Exit codes: 0 = clean, 1 = findings (or a scanned file failed to parse),
+2 = usage error.  ``--json`` with no argument prints the report to
+stdout; with a path it writes the report there and keeps the human
+summary on stdout (what the CI lint job archives).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .engine import RULES, analyze_paths, render_human, render_json
+from . import rules as _rules  # noqa: F401  (registers built-in rules)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-specific static analysis for the Sextans repro.")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to scan (default: src tests)")
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="FILE",
+                    help="emit a JSON report to FILE (or stdout with no arg)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print registered rule ids and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rid, rule in sorted(RULES.items()):
+            print(f"{rid}: {rule.summary}")
+        return 0
+
+    paths = args.paths or ["src", "tests"]
+    result = analyze_paths(paths)
+    if result["files_scanned"] == 0:
+        print(f"error: no Python files found under {paths}", file=sys.stderr)
+        return 2
+
+    if args.json == "-":
+        print(render_json(result))
+    else:
+        if args.json:
+            with open(args.json, "w", encoding="utf-8") as fh:
+                fh.write(render_json(result) + "\n")
+        print(render_human(result))
+    return 1 if result["findings"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

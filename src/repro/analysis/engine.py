@@ -1,0 +1,247 @@
+"""AST lint engine: rule registry, suppression comments, reporting.
+
+Rules are small objects with an ``id``, a ``summary``, and a
+``check(ctx) -> Iterable[Finding]`` method; they register themselves into
+``RULES`` at import time (see ``rules.py``).  The engine walks Python
+files, runs every rule, and filters findings through per-line suppression
+comments of the form::
+
+    risky_line()  # repro: ignore[rule-id] -- why this is actually fine
+    # repro: ignore[rule-a, rule-b] -- applies to the NEXT line too
+
+A suppression matches a finding on its own line or on the line directly
+below it, so block comments above the offending statement work.  The
+justification after ``--`` is required by convention (CI reviews it), but
+the engine only parses the rule list.
+
+This module must stay importable without jax/numpy: the CI lint job runs
+it in a bare interpreter before the test environment is built.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import json
+import os
+import re
+import tokenize
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+__all__ = [
+    "Finding",
+    "FileContext",
+    "Rule",
+    "RULES",
+    "register",
+    "analyze_file",
+    "analyze_paths",
+    "iter_python_files",
+    "render_human",
+    "render_json",
+]
+
+# Directories pruned while *recursing* into a scan root.  A root that is
+# itself named e.g. ``fixtures`` is still scanned — that is how CI runs
+# the seeded-violation fixtures and asserts a non-zero exit.
+EXCLUDE_DIRS = {"__pycache__", ".git", ".venv", "build", "dist", "fixtures"}
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*repro:\s*ignore\[([^\]]*)\](?:\s*--\s*(?P<why>.*))?")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+
+@dataclass
+class FileContext:
+    """Parsed view of one file handed to every rule."""
+    path: str
+    source: str
+    tree: ast.AST
+    # line -> set of suppressed rule ids ("*" suppresses every rule)
+    suppressions: Dict[int, set] = field(default_factory=dict)
+
+    def is_suppressed(self, f: Finding) -> bool:
+        for line in (f.line, f.line - 1):
+            ids = self.suppressions.get(line)
+            if ids and ("*" in ids or f.rule in ids):
+                return True
+        return False
+
+
+class Rule:
+    """Base class; subclasses set ``id``/``summary`` and implement check."""
+    id: str = ""
+    summary: str = ""
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register(rule: Rule) -> Rule:
+    RULES[rule.id] = rule
+    return rule
+
+
+# ---------------------------------------------------------------------------
+# Shared AST helpers (used by rules.py)
+
+def attach_parents(tree: ast.AST) -> None:
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            child._repro_parent = parent  # type: ignore[attr-defined]
+
+
+def parent_of(node: ast.AST) -> Optional[ast.AST]:
+    return getattr(node, "_repro_parent", None)
+
+
+def terminal_name(node: ast.AST) -> Optional[str]:
+    """Rightmost identifier of a Name/Attribute/Call chain."""
+    if isinstance(node, ast.Call):
+        return terminal_name(node.func)
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def self_attr(node: ast.AST) -> Optional[str]:
+    """``self.X`` -> ``"X"`` (only the direct attribute on ``self``)."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name) and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def root_self_attr(node: ast.AST) -> Optional[str]:
+    """For a chain rooted at self (``self.stats.packs``) return ``"stats"``."""
+    while isinstance(node, ast.Attribute):
+        got = self_attr(node)
+        if got is not None:
+            return got
+        node = node.value
+    if isinstance(node, ast.Subscript):
+        return root_self_attr(node.value)
+    return None
+
+
+def pos(node: ast.AST) -> tuple:
+    return (getattr(node, "lineno", 0), getattr(node, "col_offset", 0))
+
+
+def end_pos(node: ast.AST) -> tuple:
+    return (getattr(node, "end_lineno", getattr(node, "lineno", 0)),
+            getattr(node, "end_col_offset", getattr(node, "col_offset", 0)))
+
+
+# ---------------------------------------------------------------------------
+# File discovery / suppression parsing
+
+def iter_python_files(paths: Sequence[str]) -> Iterator[str]:
+    for root in paths:
+        if os.path.isfile(root):
+            if root.endswith(".py"):
+                yield root
+            continue
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(d for d in dirnames if d not in EXCLUDE_DIRS)
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    yield os.path.join(dirpath, fn)
+
+
+def _parse_suppressions(source: str) -> Dict[int, set]:
+    out: Dict[int, set] = {}
+    try:
+        tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+        for tok in tokens:
+            if tok.type != tokenize.COMMENT:
+                continue
+            m = _SUPPRESS_RE.search(tok.string)
+            if not m:
+                continue
+            ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+            out.setdefault(tok.start[0], set()).update(ids or {"*"})
+    except tokenize.TokenError:
+        pass
+    return out
+
+
+def analyze_file(path: str, source: Optional[str] = None,
+                 rules: Optional[Sequence[Rule]] = None
+                 ) -> tuple[List[Finding], int]:
+    """Run rules over one file. Returns (findings, n_suppressed)."""
+    if source is None:
+        with open(path, "r", encoding="utf-8") as fh:
+            source = fh.read()
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return ([Finding("syntax-error", path, e.lineno or 0, e.offset or 0,
+                         f"file does not parse: {e.msg}")], 0)
+    attach_parents(tree)
+    ctx = FileContext(path=path, source=source, tree=tree,
+                      suppressions=_parse_suppressions(source))
+    findings: List[Finding] = []
+    suppressed = 0
+    for rule in (rules if rules is not None else RULES.values()):
+        for f in rule.check(ctx):
+            if ctx.is_suppressed(f):
+                suppressed += 1
+            else:
+                findings.append(f)
+    findings.sort(key=lambda f: (f.line, f.col, f.rule))
+    return findings, suppressed
+
+
+def analyze_paths(paths: Sequence[str],
+                  rules: Optional[Sequence[Rule]] = None) -> dict:
+    findings: List[Finding] = []
+    suppressed = 0
+    nfiles = 0
+    for path in iter_python_files(paths):
+        nfiles += 1
+        fs, sup = analyze_file(path, rules=rules)
+        findings.extend(fs)
+        suppressed += sup
+    findings.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return {"files_scanned": nfiles, "findings": findings,
+            "suppressed": suppressed}
+
+
+# ---------------------------------------------------------------------------
+# Reporting
+
+def render_human(result: dict) -> str:
+    lines = [f.render() for f in result["findings"]]
+    lines.append(
+        f"{len(result['findings'])} finding(s), "
+        f"{result['suppressed']} suppressed, "
+        f"{result['files_scanned']} file(s) scanned.")
+    return "\n".join(lines)
+
+
+def render_json(result: dict) -> str:
+    payload = {
+        "files_scanned": result["files_scanned"],
+        "suppressed": result["suppressed"],
+        "findings": [asdict(f) for f in result["findings"]],
+        "rules": {r.id: r.summary for r in RULES.values()},
+    }
+    return json.dumps(payload, indent=2, sort_keys=True)

@@ -1,0 +1,415 @@
+"""Repo-specific lint rules.
+
+Each rule targets a bug class this repo has actually shipped and then
+fixed in review (see ISSUE/PR history):
+
+* ``trace-hazard``     — PR 3: raw ``.shape``/``len()`` ints in trace keys
+                         caused a recompile per flush until keys went
+                         through the geometry-bucketing helpers.
+* ``host-device-boundary`` — PR 5: packed leaves must stay host-resident;
+                         the plan tier owns the single ``device_put``.
+* ``lock-discipline``  — PR 5: scheduler/engine state shared with the
+                         pack pool + dispatch thread must only be touched
+                         under ``self._lock``.
+* ``donation-safety``  — PR 4: the streaming accumulator is donated to
+                         the AOT step; reusing the old binding afterwards
+                         reads a deleted buffer.
+
+Rules are syntactic by design — no type inference.  When a rule cannot
+prove a site safe it flags it, and a reviewed suppression comment
+(``# repro: ignore[rule-id] -- why``) is the escape hatch.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .engine import (
+    FileContext,
+    Finding,
+    Rule,
+    end_pos,
+    parent_of,
+    pos,
+    register,
+    root_self_attr,
+    self_attr,
+    terminal_name,
+)
+
+__all__ = ["TraceHazardRule", "HostDeviceBoundaryRule",
+           "LockDisciplineRule", "DonationSafetyRule"]
+
+
+def _norm(path: str) -> str:
+    return path.replace("\\", "/")
+
+
+# ---------------------------------------------------------------------------
+# trace-hazard
+
+class TraceHazardRule(Rule):
+    """Raw ``.shape`` / ``len()`` values flowing into a jit/AOT trace key.
+
+    A binding or return whose name looks like a trace key (``key``,
+    ``*_key``, ``sig``, ``signature``) must derive every dimension through
+    a bucketing helper (``bucket_geometry``/``cdiv``/``signature``/…) so
+    that geometry-mates share a compiled executable.  A raw ``b.shape[1]``
+    in a key is one recompile per distinct N — the PR 3 flush storm.
+    """
+    id = "trace-hazard"
+    summary = ("raw .shape/len()-derived int in a trace key without a "
+               "geometry-bucketing helper")
+
+    _KEY_NAME = re.compile(r"(^|_)(key|sig|signature)$")
+    _KEY_FUNC = re.compile(r"(^|_)(key|signature)$")
+    # Calls that bucket/normalise their arguments: a hazard nested inside
+    # one of these is deliberate geometry quantisation, not a raw int.
+    SANCTIONED_CALLS = {
+        "bucket_geometry", "cdiv", "signature", "plan_for", "up",
+        "bucket", "group_key", "_group_key",
+    }
+
+    def _hazards(self, expr: ast.AST) -> Iterable[Tuple[ast.AST, str]]:
+        parents: Dict[int, ast.AST] = {}
+        stack = [expr]
+        while stack:
+            node = stack.pop()
+            for child in ast.iter_child_nodes(node):
+                parents[id(child)] = node
+                stack.append(child)
+        for node in ast.walk(expr):
+            what = None
+            if isinstance(node, ast.Attribute) and node.attr == "shape":
+                what = ".shape"
+            elif (isinstance(node, ast.Call)
+                  and isinstance(node.func, ast.Name)
+                  and node.func.id == "len"):
+                what = "len()"
+            if what is None:
+                continue
+            cur: Optional[ast.AST] = parents.get(id(node))
+            sanctioned = False
+            while cur is not None:
+                if (isinstance(cur, ast.Call)
+                        and terminal_name(cur.func) in self.SANCTIONED_CALLS):
+                    sanctioned = True
+                    break
+                cur = parents.get(id(cur))
+            if not sanctioned:
+                yield node, what
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for node in ast.walk(ctx.tree):
+            target_desc = None
+            value: Optional[ast.AST] = None
+            if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                names = [terminal_name(t) for t in targets]
+                hits = [n for n in names if n and self._KEY_NAME.search(n)]
+                if hits and node.value is not None:
+                    target_desc, value = f"trace key '{hits[0]}'", node.value
+            elif isinstance(node, ast.Return) and node.value is not None:
+                fn = parent_of(node)
+                while fn is not None and not isinstance(
+                        fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    fn = parent_of(fn)
+                if fn is not None and self._KEY_FUNC.search(fn.name):
+                    target_desc = f"return of key function '{fn.name}'"
+                    value = node.value
+            if value is None:
+                continue
+            for hnode, what in self._hazards(value):
+                yield Finding(
+                    self.id, ctx.path, *pos(hnode),
+                    message=(f"raw {what} value flows into {target_desc} "
+                             "without a bucketing helper "
+                             "(bucket_geometry/cdiv/signature) — every "
+                             "distinct geometry becomes a fresh "
+                             "jit/AOT compile"))
+
+
+# ---------------------------------------------------------------------------
+# host-device-boundary
+
+class HostDeviceBoundaryRule(Rule):
+    """Device transfers of packed leaves outside the plan tier.
+
+    ``pack_hflex(device=False)`` keeps slab leaves as numpy so worker
+    threads never touch the device; ``SpmmPlan``/``StreamingPlan`` commit
+    them exactly once.  Any other ``jax.device_put``/``jnp.asarray`` on a
+    packed leaf silently re-introduces a per-call transfer (and, from a
+    pack-pool thread, a cross-thread device dependency).
+    """
+    id = "host-device-boundary"
+    summary = ("jax.device_put/jnp.asarray on packed leaves outside the "
+               "plan tier (sparse_api/plan.py, sparse_api/tensor.py)")
+
+    PACKED_ATTRS = {"vals", "cols", "rows", "q", "nse",
+                    "blocks", "brow", "indptr"}
+    ALLOWED_SUFFIXES = ("sparse_api/plan.py", "sparse_api/tensor.py")
+    # Inside these trees *any* eager device_put belongs to the plan tier.
+    STRICT_PREFIX_PARTS = ("repro/sparse_api/", "repro/core/",
+                           "repro/launch/")
+
+    def _is_device_put(self, call: ast.Call) -> bool:
+        f = call.func
+        return isinstance(f, ast.Attribute) and f.attr == "device_put"
+
+    def _is_jnp_asarray(self, call: ast.Call) -> bool:
+        f = call.func
+        if not (isinstance(f, ast.Attribute) and f.attr == "asarray"):
+            return False
+        v = f.value
+        if isinstance(v, ast.Name):
+            return v.id in ("jnp", "jax_numpy")
+        return (isinstance(v, ast.Attribute) and v.attr == "numpy"
+                and isinstance(v.value, ast.Name) and v.value.id == "jax")
+
+    def _touches_packed_leaf(self, call: ast.Call) -> bool:
+        for arg in list(call.args) + [kw.value for kw in call.keywords]:
+            for node in ast.walk(arg):
+                if (isinstance(node, ast.Attribute)
+                        and node.attr in self.PACKED_ATTRS):
+                    return True
+        return False
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        path = _norm(ctx.path)
+        if path.endswith(self.ALLOWED_SUFFIXES):
+            return
+        strict = any(part in path for part in self.STRICT_PREFIX_PARTS)
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if self._is_device_put(node):
+                if strict or self._touches_packed_leaf(node):
+                    yield Finding(
+                        self.id, ctx.path, *pos(node),
+                        message=("jax.device_put outside the plan tier — "
+                                 "SpmmPlan/StreamingPlan own the single "
+                                 "host->device transfer of packed "
+                                 "payloads (PR 5 contract)"))
+            elif self._is_jnp_asarray(node) and self._touches_packed_leaf(node):
+                yield Finding(
+                    self.id, ctx.path, *pos(node),
+                    message=("jnp.asarray on a packed leaf outside the "
+                             "plan tier commits host-resident slabs to "
+                             "the device — route through plan()/"
+                             "to_device() instead"))
+
+
+# ---------------------------------------------------------------------------
+# lock-discipline
+
+class LockDisciplineRule(Rule):
+    """Lock-guarded attributes must never be touched bare.
+
+    For every class that takes ``with self._lock:`` anywhere, the guarded
+    set is: attributes *written* under the lock, attributes *mutated via
+    a method call* under the lock (``self._seen.add(...)``), plus the
+    class's declared ``_lock_guarded`` tuple.  Any load or store of a
+    guarded attribute outside a locked region (``__init__``/``__new__``
+    excepted — the object is not shared yet) is a finding.
+    """
+    id = "lock-discipline"
+    summary = ("attribute written under self._lock accessed without "
+               "holding the lock")
+
+    MUTATORS = {"add", "append", "appendleft", "extend", "insert", "pop",
+                "popleft", "remove", "discard", "clear", "update",
+                "setdefault", "__setitem__"}
+    CONSTRUCTORS = {"__init__", "__new__"}
+
+    def _is_lock_ctx(self, expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Call):  # e.g. self._lock.acquire-style wrappers
+            expr = expr.func
+        return self_attr(expr) == "_lock"
+
+    @staticmethod
+    def _own_nodes(cls: ast.ClassDef) -> List[ast.AST]:
+        """All nodes of ``cls`` excluding nested ClassDef subtrees (those
+        are analysed as their own class)."""
+        out: List[ast.AST] = []
+        stack: List[ast.AST] = [cls]
+        while stack:
+            node = stack.pop()
+            out.append(node)
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, ast.ClassDef):
+                    continue
+                stack.append(child)
+        return out
+
+    def _guarded_and_locked(self, cls: ast.ClassDef
+                            ) -> Tuple[Dict[str, int], Set[int]]:
+        guarded: Dict[str, int] = {}  # attr -> first guarded-write line
+        locked_ids: Set[int] = set()
+        for stmt in cls.body:  # declared annotation
+            if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                    and isinstance(stmt.targets[0], ast.Name)
+                    and stmt.targets[0].id == "_lock_guarded"
+                    and isinstance(stmt.value, (ast.Tuple, ast.List))):
+                for elt in stmt.value.elts:
+                    if isinstance(elt, ast.Constant) and isinstance(
+                            elt.value, str):
+                        guarded.setdefault(elt.value, stmt.lineno)
+        for node in self._own_nodes(cls):
+            if not isinstance(node, ast.With):
+                continue
+            if not any(self._is_lock_ctx(item.context_expr)
+                       for item in node.items):
+                continue
+            for sub in ast.walk(node):
+                locked_ids.add(id(sub))
+            for sub in ast.walk(node):
+                if isinstance(sub, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                    targets = (sub.targets if isinstance(sub, ast.Assign)
+                               else [sub.target])
+                    for t in targets:
+                        attr = root_self_attr(t)
+                        if attr is not None:
+                            guarded.setdefault(attr, sub.lineno)
+                elif isinstance(sub, ast.Call) and isinstance(
+                        sub.func, ast.Attribute):
+                    if sub.func.attr in self.MUTATORS:
+                        attr = self_attr(sub.func.value)
+                        if attr is not None:
+                            guarded.setdefault(attr, sub.lineno)
+        guarded.pop("_lock", None)
+        return guarded, locked_ids
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        for cls in ast.walk(ctx.tree):
+            if not isinstance(cls, ast.ClassDef):
+                continue
+            guarded, locked_ids = self._guarded_and_locked(cls)
+            if not guarded:
+                continue
+            # map: node id -> enclosing function name (innermost)
+            encl: Dict[int, str] = {}
+
+            def _tag(node: ast.AST, fname: Optional[str]) -> None:
+                for child in ast.iter_child_nodes(node):
+                    nf = fname
+                    if isinstance(child, (ast.FunctionDef,
+                                          ast.AsyncFunctionDef)):
+                        nf = child.name
+                    if fname is not None:
+                        encl[id(child)] = fname
+                    _tag(child, nf)
+
+            _tag(cls, None)
+            for node in self._own_nodes(cls):
+                attr = self_attr(node)
+                if attr is None or attr not in guarded:
+                    continue
+                if id(node) in locked_ids:
+                    continue
+                fname = encl.get(id(node))
+                if fname in self.CONSTRUCTORS:
+                    continue
+                yield Finding(
+                    self.id, ctx.path, *pos(node),
+                    message=(f"'{cls.name}.{attr}' is lock-guarded "
+                             f"(see line {guarded[attr]}) but accessed "
+                             "here without holding self._lock"))
+
+
+# ---------------------------------------------------------------------------
+# donation-safety
+
+class DonationSafetyRule(Rule):
+    """No use of a donated binding after a donating AOT dispatch.
+
+    ``StreamingPlan`` compiles its step with ``donate_argnums`` so the
+    accumulator is updated in place; after ``acc = self._step_exec(*ops,
+    acc)`` the *old* ``acc`` buffer is deleted.  This rule tracks plain
+    name arguments of calls to donating executables (assignments from
+    ``_aot_compile(..., donate_argnums=...)``, plus the conventional
+    ``_step_exec``) and flags any later read of a name that was passed in
+    and not rebound by the call itself.
+
+    The analysis is linear in source order — a loop that donates a name
+    bound before the loop on a *later* line is caught; exotic control
+    flow may need a reviewed suppression.
+    """
+    id = "donation-safety"
+    summary = ("donated buffer binding read again after a donate_argnums "
+               "dispatch")
+
+    DEFAULT_DONATING = {"_step_exec"}
+
+    def _donating_names(self, tree: ast.AST) -> Set[str]:
+        names = set(self.DEFAULT_DONATING)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Assign):
+                continue
+            v = node.value
+            if not (isinstance(v, ast.Call)
+                    and terminal_name(v.func) == "_aot_compile"):
+                continue
+            donates = False
+            for kw in v.keywords:
+                if kw.arg == "donate_argnums" and not (
+                        isinstance(kw.value, ast.Constant)
+                        and kw.value.value is None):
+                    donates = True
+            if not donates:
+                continue
+            for t in node.targets:
+                name = terminal_name(t)
+                if name:
+                    names.add(name)
+        return names
+
+    def check(self, ctx: FileContext) -> Iterable[Finding]:
+        donating = self._donating_names(ctx.tree)
+        for fn in ast.walk(ctx.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            donations: List[Tuple[tuple, str, int]] = []  # (pos, name, line)
+            stores: List[Tuple[tuple, str]] = []
+            loads: List[Tuple[tuple, str, ast.Name]] = []
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Name):
+                    if isinstance(node.ctx, ast.Store):
+                        stores.append((pos(node), node.id))
+                    elif isinstance(node.ctx, ast.Load):
+                        loads.append((pos(node), node.id, node))
+                if not (isinstance(node, ast.Call)
+                        and terminal_name(node.func) in donating):
+                    continue
+                rebound: Set[str] = set()
+                stmt = parent_of(node)
+                if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+                    targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                               else [stmt.target])
+                    rebound = {t.id for t in targets
+                               if isinstance(t, ast.Name)}
+                for arg in node.args:
+                    if isinstance(arg, ast.Name) and arg.id not in rebound:
+                        donations.append((end_pos(node), arg.id, node.lineno))
+            for dpos, name, dline in donations:
+                for lpos, lname, lnode in loads:
+                    if lname != name or lpos <= dpos:
+                        continue
+                    if any(sname == name and dpos < spos <= lpos
+                           for spos, sname in stores):
+                        continue
+                    yield Finding(
+                        self.id, ctx.path, *pos(lnode),
+                        message=(f"'{name}' was donated to the AOT "
+                                 f"executable on line {dline} "
+                                 "(donate_argnums) — its buffer is "
+                                 "deleted; rebind the result instead of "
+                                 "reading the old name"))
+                    break  # one finding per donation is enough
+
+
+register(TraceHazardRule())
+register(HostDeviceBoundaryRule())
+register(LockDisciplineRule())
+register(DonationSafetyRule())

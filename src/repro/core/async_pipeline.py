@@ -115,6 +115,11 @@ class PackExecutePipeline:
     flush N+1's *packs* proceed on the workers (the cross-flush overlap).
     """
 
+    #: ``_closed`` is the shutdown latch; owner and worker threads may
+    #: race shutdown (engine.close vs. scheduler.shutdown), so the
+    #: check-and-set must hold ``self._lock`` (lock-discipline rule).
+    _lock_guarded = ("_closed",)
+
     def __init__(self, pack_threads: Optional[int] = None):
         self.pack_threads = pack_thread_count(pack_threads)
         self._packs = ThreadPoolExecutor(
@@ -122,6 +127,7 @@ class PackExecutePipeline:
             thread_name_prefix="sextans-pack")
         self._dispatch = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="sextans-dispatch")
+        self._lock = threading.Lock()
         self._closed = False
 
     def submit_pack(self, fn: Callable, *args):
@@ -141,9 +147,10 @@ class PackExecutePipeline:
         pool must stay open until every dispatch job has finished —
         joining the pack pool first would reject those submissions and
         strand the flush's futures unresolved."""
-        if self._closed:
-            return
-        self._closed = True
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         self._dispatch.shutdown(wait=wait)
         self._packs.shutdown(wait=wait)
 

@@ -90,6 +90,12 @@ class EngineStats:
 class SextansEngine:
     """General-purpose SpMM executor with an HFlex executable cache."""
 
+    #: State shared with the async pack pool / dispatch thread: every
+    #: access outside ``__init__`` must hold ``self._lock`` (enforced by
+    #: the ``lock-discipline`` rule of ``repro.analysis``).
+    _lock_guarded = ("stats", "_seen_signatures", "_plans", "_pipe",
+                     "last_streaming_plan")
+
     def __init__(
         self,
         tm: int = 128,
@@ -284,10 +290,10 @@ class SextansEngine:
         pl = self.plan_for(packed, n, dtype, stream=True,
                            device_bytes=device_bytes,
                            window_chunk=window_chunk)
-        self.last_streaming_plan = pl
         npad = cdiv(n, self.tn) * self.tn
         sig = (*t.geometry, npad, pl.backend, "stream", pl.window_chunk)
         with self._lock:
+            self.last_streaming_plan = pl
             if sig in self._seen_signatures:
                 self.stats.cache_hits += 1
             else:

@@ -62,6 +62,7 @@ __all__ = [
     "schedule_stats",
     "inorder_cycles",
     "verify_schedule",
+    "min_dependency_distance",
 ]
 
 BUBBLE = -1
@@ -230,6 +231,30 @@ def verify_schedule(sched: Schedule, rows: np.ndarray) -> None:
             f"RAW violation: row {rs[i]} at cycles {cs[i]} and {cs[i + 1]} "
             f"(D={sched.d})"
         )
+
+
+def min_dependency_distance(sched: Schedule, rows: np.ndarray
+                            ) -> "int | None":
+    """Smallest cycle gap between two placements of the same row — the
+    tightest RAW dependency the accumulator pipeline must absorb.
+
+    II=1 legality (paper Sec. 3.3) is exactly ``min_dependency_distance
+    >= sched.d``; returns ``None`` when no row appears twice (every
+    distance is legal).  This is the quantity ``verify_schedule`` bounds
+    and the ``repro.analysis`` validator reports on arbitrary schedules,
+    including hand-built or corrupted ones."""
+    rows = np.asarray(rows)
+    idx = sched.slots[sched.slots != BUBBLE]
+    if idx.size == 0:
+        return None
+    cyc = np.nonzero(sched.slots != BUBBLE)[0]
+    r = rows[idx]
+    order = np.lexsort((cyc, r))
+    rs, cs = r[order], cyc[order]
+    same = rs[1:] == rs[:-1]
+    if not same.any():
+        return None
+    return int(np.diff(cs)[same].min())
 
 
 def split_hub_rows(rows: np.ndarray, threshold: int) -> np.ndarray:

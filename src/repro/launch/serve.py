@@ -182,6 +182,11 @@ class SpmmScheduler:
       cumulative numbers alone ambiguous).
     """
 
+    #: State shared between submitters, flush, and the async dispatch
+    #: thread: every access outside ``__init__`` must hold ``self._lock``
+    #: (enforced by the ``lock-discipline`` rule of ``repro.analysis``).
+    _lock_guarded = ("_pending", "_next_ticket", "stats")
+
     def __init__(self, engine: Optional[SextansEngine] = None,
                  max_group: int = 64,
                  device_bytes: Optional[int] = None,
@@ -237,15 +242,22 @@ class SpmmScheduler:
                 f"{(request.a.shape[0], b.shape[1])}, got {c.shape}")
         if b is not request.b or c is not request.c:
             request = dataclasses.replace(request, b=b, c=c)
+        # Ticket allocation and enqueue are one critical section: the
+        # flush resolves futures by iterating _pending and assumes it is
+        # ticket-ordered, so concurrent submitters must not interleave
+        # between taking a ticket and appending.
+        if not self.async_pipeline:
+            with self._lock:
+                ticket = self._next_ticket
+                self._next_ticket += 1
+                self._pending.append(_Entry(ticket, request))
+            return ticket
+        pack = self._pipe.submit_pack(self._pack_host, request)
         with self._lock:
             ticket = self._next_ticket
             self._next_ticket += 1
-        if not self.async_pipeline:
-            self._pending.append(_Entry(ticket, request))
-            return ticket
-        e = _Entry(ticket, request, future=SpmmFuture(ticket))
-        e.pack = self._pipe.submit_pack(self._pack_host, request)
-        with self._lock:
+            e = _Entry(ticket, request, future=SpmmFuture(ticket))
+            e.pack = pack
             self._pending.append(e)
         return e.future
 
@@ -623,20 +635,23 @@ class SpmmScheduler:
     @property
     def batched_fraction(self) -> float:
         """Fraction of served requests that rode a group dispatch."""
-        n = self.stats["requests"]
-        return self.stats["batched_requests"] / n if n else 0.0
+        with self._lock:
+            n = self.stats["requests"]
+            return self.stats["batched_requests"] / n if n else 0.0
 
     @property
     def dispatches_per_request(self) -> float:
-        n = self.stats["requests"]
-        return self.stats["dispatches"] / n if n else 0.0
+        with self._lock:
+            n = self.stats["requests"]
+            return self.stats["dispatches"] / n if n else 0.0
 
     @property
     def pack_hidden_fraction(self) -> float:
         """Fraction of host pack time hidden behind the pipeline (async
         mode; 0.0 when packing is fully serialized with execution)."""
-        p = self.stats["preprocess_s"]
-        return min(1.0, self.stats["overlap_s"] / p) if p > 0 else 0.0
+        with self._lock:
+            p = self.stats["preprocess_s"]
+            return min(1.0, self.stats["overlap_s"] / p) if p > 0 else 0.0
 
 
 def serve_spmm_requests(

@@ -235,6 +235,9 @@ def spmm_streaming(
             f"spmm_streaming expects a SparseTensor, got {type(a).__name__}")
     if a.format is not Format.HFLEX:
         raise ValueError("spmm_streaming supports Format.HFLEX only")
+    from repro.analysis.validate import maybe_validate
+
+    maybe_validate(a)   # SEXTANS_CHECK=1: packed-artifact invariants
     if a.batch is not None:
         raise ValueError("spmm_streaming takes one matrix at a time")
     b = jnp.asarray(b)
@@ -288,6 +291,9 @@ def spmm(
     """
     if not isinstance(a, SparseTensor):
         raise TypeError(f"spmm expects a SparseTensor, got {type(a).__name__}")
+    from repro.analysis.validate import maybe_validate
+
+    maybe_validate(a)   # SEXTANS_CHECK=1: packed-artifact invariants
     b = jnp.asarray(b)
     m, k = a.shape
     g = a.batch

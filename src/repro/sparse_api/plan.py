@@ -61,6 +61,7 @@ executable and is not differentiable — training goes through ``spmm`` (or
 from __future__ import annotations
 
 import dataclasses
+import threading
 import warnings
 from typing import Any, Dict, Optional, Sequence, Tuple, Union
 
@@ -87,20 +88,36 @@ PLAN_STATS: Dict[str, int] = {"exec_hits": 0, "exec_misses": 0,
 
 _EXEC_CACHE: Dict[Tuple, Any] = {}
 
+# Plans are built both by the owning thread and the async dispatch thread
+# (PackExecutePipeline serializes *dispatch*, but a sync engine call can
+# trace concurrently with it).  One lock makes hit/miss accounting exact
+# and bounds compilation to once per key even under that race; holding it
+# across the compile is deliberate — two threads racing the same key
+# would otherwise both pay the trace+compile.
+_EXEC_LOCK = threading.Lock()
+
 
 def clear_plan_cache() -> None:
     """Drop all cached plan executables (tests / memory pressure)."""
-    _EXEC_CACHE.clear()
+    with _EXEC_LOCK:
+        _EXEC_CACHE.clear()
 
 
 def _aot_compile(key: Tuple, fn, arg_shapes, in_shardings=None,
                  out_shardings=None, donate_argnums=None):
     """Lower + compile ``fn`` for ``arg_shapes`` once per cache key."""
-    hit = _EXEC_CACHE.get(key)
-    if hit is not None:
-        PLAN_STATS["exec_hits"] += 1
-        return hit
-    PLAN_STATS["exec_misses"] += 1
+    with _EXEC_LOCK:
+        hit = _EXEC_CACHE.get(key)
+        if hit is not None:
+            PLAN_STATS["exec_hits"] += 1
+            return hit
+        PLAN_STATS["exec_misses"] += 1
+        return _aot_compile_locked(key, fn, arg_shapes, in_shardings,
+                                   out_shardings, donate_argnums)
+
+
+def _aot_compile_locked(key, fn, arg_shapes, in_shardings,
+                        out_shardings, donate_argnums):
     kw = {}
     if donate_argnums is not None:
         kw["donate_argnums"] = donate_argnums
@@ -183,6 +200,9 @@ class SpmmPlan:
             raise TypeError(f"plan expects a SparseTensor, got {type(a).__name__}")
         if n <= 0:
             raise ValueError("n must be positive")
+        from repro.analysis.validate import maybe_validate
+
+        maybe_validate(a)   # SEXTANS_CHECK=1: validate at plan time
         self.a = a
         self.n = int(n)
         self.m, self.k = a.shape
@@ -414,6 +434,9 @@ class StreamingPlan:
                 "scheduler routes oversized requests around group stacking)")
         if n <= 0:
             raise ValueError("n must be positive")
+        from repro.analysis.validate import maybe_validate
+
+        maybe_validate(a)   # SEXTANS_CHECK=1: validate at plan time
         self.a = a
         self.n = int(n)
         self.m, self.k = a.shape

@@ -393,8 +393,10 @@ class SparseTensor:
             k=k_w,
             nnz=nnz_w,
         )
-        return SparseTensor(data=data_w, format=self.format,
-                            shape=(self.m, k_w))
+        from repro.analysis.validate import maybe_validate
+
+        return maybe_validate(SparseTensor(data=data_w, format=self.format,
+                                           shape=(self.m, k_w)))
 
     # -- compute ------------------------------------------------------------
 
@@ -591,7 +593,10 @@ def stack_hflex(tensors, device: bool = True) -> SparseTensor:
         interleaved=d0.interleaved,
         nnz=sum(t.data.nnz for t in ts),
     )
-    return SparseTensor(data=stacked, format=Format.HFLEX, shape=t0.shape)
+    from repro.analysis.validate import maybe_validate
+
+    return maybe_validate(
+        SparseTensor(data=stacked, format=Format.HFLEX, shape=t0.shape))
 
 
 def from_bsr_weight(w: BsrWeight) -> SparseTensor:

@@ -11,3 +11,18 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def sextans_check(monkeypatch):
+    """Turn on SEXTANS_CHECK packed-artifact validation for one test and
+    hand back the validator for explicit calls.  Usage::
+
+        def test_something(sextans_check, rng):
+            t = sp.from_dense(...)      # pack/plan/spmm hooks now validate
+            sextans_check(t)            # or validate explicitly
+    """
+    monkeypatch.setenv("SEXTANS_CHECK", "1")
+    from repro.analysis.validate import validate
+
+    return validate

@@ -1,0 +1,33 @@
+"""The same four violations, each suppressed with a justification —
+the analyzer must report zero findings (and four suppressions)."""
+import threading
+
+import jax.numpy as jnp
+
+
+def plan_key(packed, b):
+    key = (id(packed), b.shape[1])  # repro: ignore[trace-hazard] -- fixture: same-line suppression
+    return key
+
+
+def commit(packed):
+    # repro: ignore[host-device-boundary] -- fixture: next-line suppression
+    return jnp.asarray(packed.vals)
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def read(self):
+        return self.count  # repro: ignore[lock-discipline] -- fixture: racy snapshot tolerated here
+
+
+def run(plan, ops, acc):
+    out = plan._step_exec(*ops, acc)
+    return out + acc  # repro: ignore[donation-safety] -- fixture: demo of the escape hatch

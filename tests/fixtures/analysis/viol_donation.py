@@ -1,0 +1,7 @@
+"""Seeded donation-safety fixture: donated accumulator read after the
+dispatch."""
+
+
+def run(plan, ops, acc):
+    out = plan._step_exec(*ops, acc)
+    return out + acc  # VIOLATION

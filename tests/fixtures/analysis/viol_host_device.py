@@ -1,0 +1,7 @@
+"""Seeded host-device-boundary fixture: packed leaf committed outside
+the plan tier."""
+import jax.numpy as jnp
+
+
+def commit(packed):
+    return jnp.asarray(packed.vals)  # VIOLATION

@@ -1,0 +1,15 @@
+"""Seeded lock-discipline fixture: guarded counter read bare."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.count = 0
+
+    def bump(self):
+        with self._lock:
+            self.count += 1
+
+    def read(self):
+        return self.count  # VIOLATION

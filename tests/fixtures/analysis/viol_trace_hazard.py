@@ -1,0 +1,6 @@
+"""Seeded trace-hazard fixture: raw .shape int in a trace key."""
+
+
+def plan_key(packed, b):
+    key = (id(packed), b.shape[1])  # VIOLATION
+    return key
