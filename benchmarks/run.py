@@ -17,9 +17,15 @@ trajectory can accumulate across PRs):
                async-pipelined (futures + pack/execute overlap) serving
                on a mixed pool of bucket-mates (bit-identity asserted;
                requests/s, dispatches/request, pack_hidden_fraction)
-  stream_*   — out-of-core K-window streaming vs the resident plan at
-               several device_bytes caps (bit-identity asserted; Mnnz/s,
-               window dispatches, peak device working set)
+  stream_*   — out-of-core 2-D (K-window x N-tile) streaming vs the
+               resident plan at several device_bytes caps, including a
+               huge-N case whose budget forces column tiling
+               (bit-identity asserted; Mnnz/s, window dispatches, column
+               tiles, peak device working set)
+  spmv_*     — skinny-N (N in {1, 4, 8}) SpMV fast lane vs the tall-N
+               kernel at the same widths (bit-identity asserted; Mnnz/s,
+               speedup ratio) plus an auto-routed serving pool reporting
+               skinny_dispatches
 
 All wall-clock numbers use ``time.perf_counter`` (monotonic,
 high-resolution); JAX results are ``block_until_ready``-fenced.
@@ -315,12 +321,18 @@ def bench_serve() -> None:
 
 
 def bench_stream() -> None:
-    """Out-of-core K-window streaming vs the resident plan at several
-    ``device_bytes`` caps: achieved Mnnz/s, window dispatches per run, and
-    the device working set (peak_payload_bytes) actually pinned.  Streaming
-    is bit-identical to the resident path — asserted before timing — so the
-    rows measure pure pipeline overhead: what it costs to run a matrix the
-    chip could not hold."""
+    """Out-of-core 2-D (K-window x N-tile) streaming vs the resident plan
+    at several ``device_bytes`` caps: achieved Mnnz/s, window dispatches
+    per run, column tiles, and the device working set
+    (peak_payload_bytes) actually pinned.  Streaming is bit-identical to
+    the resident path — asserted before timing — so the rows measure pure
+    pipeline overhead: what it costs to run a matrix the chip could not
+    hold.  The ``huge_n`` row caps the budget below one full-N window
+    chunk, so the plan must tile the dense operand's columns too
+    (``n_tiles > 1``) — tiled runs return host numpy, hence the
+    ``jax.block_until_ready`` fence (a no-op on numpy)."""
+    import jax
+
     import repro.sparse_api as sp
     from repro.core.sparse import power_law_sparse
 
@@ -346,20 +358,113 @@ def bench_stream() -> None:
         y = np.asarray(P.run(b))
         bitexact = bool(np.array_equal(y, y_ref))
         assert bitexact, "streaming diverged from resident plan"
-        us = _time_call(lambda: P.run(b).block_until_ready(), iters=10)
+        us = _time_call(lambda: jax.block_until_ready(P.run(b)), iters=10)
         mnnz = a.nnz / (us / 1e6) / 1e6
         _row(f"stream_spmm_cap_payload/{frac}", us,
-             f"{mnnz:.1f}Mnnz/s_{P.steps}disp_wc{P.window_chunk}_bitexact",
+             f"{mnnz:.1f}Mnnz/s_{P.window_dispatches}disp_"
+             f"wc{P.window_chunk}_nt{P.n_tiles}_bitexact",
              extra={
                  "streamed": 1,
                  "device_bytes": cap,
-                 "window_dispatches": P.steps,
+                 "window_dispatches": P.window_dispatches,
                  "window_chunk": P.window_chunk,
+                 "n_tile": P.n_tile,
+                 "n_tiles": P.n_tiles,
                  "peak_payload_bytes": P.peak_payload_bytes,
                  "payload_bytes": payload,
                  "mnnz_per_s": mnnz,
                  "bit_identical": bitexact,
              })
+
+    # huge-N: the budget holds less than ONE full-N window chunk, so the
+    # 2-D grid must tile columns as well as windows
+    n_huge = 256
+    b_huge = rng.standard_normal((8192, n_huge)).astype(np.float32)
+    ref_huge = np.asarray(sp.plan(A, n_huge, backend="jnp").run(b_huge))
+    floor = sp.plan(A, n_huge, backend="jnp", stream=True,
+                    window_chunk=1).peak_payload_bytes
+    cap = min(int(floor * 0.5), payload)
+    P = sp.plan(A, n_huge, backend="jnp", device_bytes=cap)
+    assert isinstance(P, sp.StreamingPlan), "cap did not select streaming"
+    assert P.n_tiles > 1, "budget failed to force column tiling"
+    y = P.run(b_huge)
+    assert isinstance(y, np.ndarray)
+    bitexact = bool(np.array_equal(y, ref_huge))
+    assert bitexact, "2-D streaming diverged from resident plan"
+    us = _time_call(lambda: jax.block_until_ready(P.run(b_huge)), iters=5)
+    mnnz = a.nnz / (us / 1e6) / 1e6
+    _row("stream_spmm_2d_huge_n", us,
+         f"{mnnz:.1f}Mnnz/s_{P.window_dispatches}disp_wc{P.window_chunk}_"
+         f"nt{P.n_tiles}_bitexact",
+         extra={
+             "streamed": 1,
+             "device_bytes": cap,
+             "window_dispatches": P.window_dispatches,
+             "window_chunk": P.window_chunk,
+             "n_tile": P.n_tile,
+             "n_tiles": P.n_tiles,
+             "peak_payload_bytes": P.peak_payload_bytes,
+             "payload_bytes": payload,
+             "mnnz_per_s": mnnz,
+             "bit_identical": bitexact,
+         })
+
+
+def bench_spmv() -> None:
+    """Skinny-N SpMV fast lane vs the tall-N kernel at N in {1, 4, 8}:
+    the lane drops the NT grid dimension and pads N to 8 lanes instead of
+    TN=128, so every B window streams once and >90% of the padding work
+    disappears.  Results are bit-identical (asserted); the ratio is the
+    lane's speedup at that width.  The ``serve_pool`` row routes a skinny
+    request pool through ``impl="auto"`` and reports the scheduler's
+    ``skinny_dispatches`` accounting."""
+    import jax.numpy as jnp
+
+    import repro.sparse_api as sp
+    from repro.core.engine import SextansEngine
+    from repro.core.sparse import power_law_sparse
+    from repro.launch.serve import SpmmRequest, serve_spmm_requests
+
+    rng = np.random.default_rng(0)
+    a = power_law_sparse(512, 1024, 6, seed=1)
+    A = sp.from_sparse_matrix(a, tm=128, k0=128, chunk=8, bucket=True)
+    for n in (1, 4, 8):
+        b = jnp.asarray(rng.standard_normal((1024, n)), jnp.float32)
+        y_tall = np.asarray(sp.spmm(A, b, backend="pallas", tn=128,
+                                    interpret=True))
+        y_skinny = np.asarray(sp.spmm(A, b, backend="spmv", interpret=True))
+        bitexact = bool(np.array_equal(y_skinny, y_tall))
+        assert bitexact, f"spmv lane diverged from tall-N kernel at N={n}"
+        us_t = _time_call(lambda: sp.spmm(
+            A, b, backend="pallas", tn=128,
+            interpret=True).block_until_ready())
+        us_s = _time_call(lambda: sp.spmm(
+            A, b, backend="spmv", interpret=True).block_until_ready())
+        mnnz_t = a.nnz / (us_t / 1e6) / 1e6
+        mnnz_s = a.nnz / (us_s / 1e6) / 1e6
+        ratio = us_t / us_s
+        _row(f"spmv_n{n}_tall", us_t, f"{mnnz_t:.2f}Mnnz/s_tn128",
+             extra={"n": n, "mnnz_per_s": mnnz_t})
+        _row(f"spmv_n{n}_skinny", us_s,
+             f"{mnnz_s:.2f}Mnnz/s_{ratio:.2f}x_vs_talln_bitexact",
+             extra={"n": n, "mnnz_per_s": mnnz_s,
+                    "speedup_vs_talln": ratio, "bit_identical": bitexact})
+
+    # auto-routed skinny pool: the scheduler must count the lane
+    reqs = [SpmmRequest(
+        a=power_law_sparse(256, 320, 5, seed=i),
+        b=rng.standard_normal((320, 4)).astype(np.float32))
+        for i in range(8)]
+    t0 = time.perf_counter()
+    _, stats = serve_spmm_requests(
+        reqs, SextansEngine(tm=128, k0=128, chunk=8, impl="auto"))
+    dt = time.perf_counter() - t0
+    assert stats["skinny_dispatches"] > 0, "auto pool missed the SpMV lane"
+    _row("spmv_serve_pool", dt * 1e6 / len(reqs),
+         f"{stats['skinny_dispatches']}skinny_disp_auto_routed",
+         extra={"skinny_dispatches": stats["skinny_dispatches"],
+                "requests": len(reqs),
+                "dispatches_per_request": stats["dispatches_per_request"]})
 
 
 def bench_validate() -> None:
@@ -437,6 +542,7 @@ def main() -> None:
         ("scheduler", bench_scheduler),
         ("serve", bench_serve),
         ("stream", bench_stream),
+        ("spmv", bench_spmv),
     ]
     if args.validate:
         sections.append(("validate", bench_validate))

@@ -69,7 +69,10 @@ class EngineStats:
                               # G members; streaming: window steps + epilogue)
     group_calls: int = 0      # batched group dispatches among the above
     streamed: int = 0         # problems served through the out-of-core tier
-    window_dispatches: int = 0  # K0-window-chunk dispatches (streaming)
+    window_dispatches: int = 0  # K0-window-chunk dispatches (streaming,
+                              # summed over column tiles)
+    n_tiles: int = 0          # max column tiles any streamed call needed
+    skinny_dispatches: int = 0  # dispatches routed to a skinny-N backend
     peak_payload_bytes: int = 0  # max device working set of a streamed call
     cache_hits: int = 0
     cache_misses: int = 0
@@ -173,12 +176,14 @@ class SextansEngine:
         and so are alpha/beta, which the kernel reads at run time.
 
         ``b`` is forwarded to backend resolution so custom ``auto`` policies
-        that inspect the operand see the same value dispatch will."""
+        that inspect the operand see the same value dispatch will; ``n`` is
+        forwarded too, so the N-aware skinny-lane policy resolves even when
+        only the width is known."""
         from repro.sparse_api import resolve_backend
 
         t = self._as_tensor(packed)
         npad = cdiv(n, self.tn) * self.tn
-        backend = resolve_backend(self.impl, t, b)
+        backend = resolve_backend(self.impl, t, b, n=n)
         return (*t.geometry, npad, backend)
 
     #: plan_for keeps at most this many plans; oldest evicted first.
@@ -186,7 +191,8 @@ class SextansEngine:
 
     def plan_for(self, packed, n: int, dtype=None, *, stream: bool = False,
                  device_bytes: Optional[int] = None,
-                 window_chunk: Optional[int] = None):
+                 window_chunk: Optional[int] = None,
+                 n_tile: Optional[int] = None):
         """The engine's plan for (matrix, N) — built on first use, then a
         dictionary lookup.  Executables are shared across bucket-mates
         through the module-level plan cache.  ``stream=True`` builds/caches
@@ -204,16 +210,17 @@ class SextansEngine:
         from repro.sparse_api import plan as _plan
 
         if not stream and (device_bytes is not None
-                           or window_chunk is not None):
+                           or window_chunk is not None
+                           or n_tile is not None):
             # the cache key would not record them, so a streaming plan
             # could silently shadow the resident entry — refuse instead
             raise ValueError(
-                "device_bytes/window_chunk require stream=True "
+                "device_bytes/window_chunk/n_tile require stream=True "
                 "(plan_for's non-stream path always builds resident plans)")
         dtype = jnp.dtype(dtype or jnp.float32)
         key = (id(packed), int(n), str(dtype))
         if stream:
-            key += ("stream", device_bytes, window_chunk)
+            key += ("stream", device_bytes, window_chunk, n_tile)
         with self._lock:
             hit = self._plans.get(key)
         if hit is not None:
@@ -222,7 +229,7 @@ class SextansEngine:
         if stream:
             pl = _plan(t, n, backend=self.impl, dtype=dtype, stream=True,
                        device_bytes=device_bytes, window_chunk=window_chunk,
-                       tn=self.tn, interpret=self.interpret)
+                       n_tile=n_tile, tn=self.tn, interpret=self.interpret)
         else:
             pl = _plan(t, n, backend=self.impl, dtype=dtype,
                        tn=self.tn, interpret=self.interpret)
@@ -240,7 +247,7 @@ class SextansEngine:
         alpha: float = 1.0,
         beta: float = 0.0,
     ) -> jax.Array:
-        from repro.sparse_api import spmm
+        from repro.sparse_api import SKINNY_BACKENDS, spmm
 
         t = self._as_tensor(packed)
         sig = self.signature(t, b.shape[1], b)
@@ -252,6 +259,8 @@ class SextansEngine:
                 self._seen_signatures.add(sig)
             self.stats.calls += 1
             self.stats.dispatches += 1
+            if sig[-1] in SKINNY_BACKENDS:
+                self.stats.skinny_dispatches += 1
         if self.use_plans:
             # Pass the *caller's* object: the plan cache keys on its id, so
             # legacy PackedSpMM inputs hit the cache across calls.
@@ -270,28 +279,34 @@ class SextansEngine:
         *,
         device_bytes: Optional[int] = None,
         window_chunk: Optional[int] = None,
+        n_tile: Optional[int] = None,
     ) -> jax.Array:
         """Execute one SpMM through the out-of-core streaming tier.
 
-        The matrix's slab payload stays host-side; K0-window chunks stream
-        through a persistent C accumulator (``repro.sparse_api.
-        StreamingPlan``), so problems whose payload exceeds ``device_bytes``
-        still run — the workload the paper's off-chip streaming was built
-        for.  ``b`` may be a host (numpy) array: only chunk-sized slices
-        are ever transferred.  Results are bit-identical to :meth:`spmm`.
+        The matrix's slab payload stays host-side; the 2-D (K-window ×
+        N-tile) grid of ``repro.sparse_api.StreamingPlan`` streams chunks
+        through a persistent C-stripe accumulator, so problems whose
+        payload exceeds ``device_bytes`` still run — including ones whose
+        *dense operand* is itself too wide for a single device-resident
+        stripe.  ``b`` may be a host (numpy) array: only chunk-sized
+        slices are ever transferred.  Results are bit-identical to
+        :meth:`spmm` (tiled runs return host numpy).
 
-        Counts as one served problem and ``steps + 1`` dispatches
-        (``stats.window_dispatches`` tracks the window steps;
-        ``stats.peak_payload_bytes`` the device working set high-water).
+        Counts as one served problem and ``window_dispatches + n_tiles``
+        dispatches (one epilogue per column tile);
+        ``stats.window_dispatches`` tracks the window steps,
+        ``stats.n_tiles`` the column-tile high-water and
+        ``stats.peak_payload_bytes`` the device working-set high-water.
         """
         t = self._as_tensor(packed)
         n = int(np.shape(b)[-1])               # shape only — never copy b
         dtype = jnp.dtype(getattr(b, "dtype", jnp.float32))
         pl = self.plan_for(packed, n, dtype, stream=True,
                            device_bytes=device_bytes,
-                           window_chunk=window_chunk)
+                           window_chunk=window_chunk, n_tile=n_tile)
         npad = cdiv(n, self.tn) * self.tn
-        sig = (*t.geometry, npad, pl.backend, "stream", pl.window_chunk)
+        sig = (*t.geometry, npad, pl.backend, "stream", pl.window_chunk,
+               pl.n_tile)
         with self._lock:
             self.last_streaming_plan = pl
             if sig in self._seen_signatures:
@@ -301,8 +316,9 @@ class SextansEngine:
                 self._seen_signatures.add(sig)
             self.stats.calls += 1
             self.stats.streamed += 1
-            self.stats.dispatches += pl.steps + 1
-            self.stats.window_dispatches += pl.steps
+            self.stats.dispatches += pl.window_dispatches + pl.n_tiles
+            self.stats.window_dispatches += pl.window_dispatches
+            self.stats.n_tiles = max(self.stats.n_tiles, pl.n_tiles)
             self.stats.peak_payload_bytes = max(self.stats.peak_payload_bytes,
                                                 pl.peak_payload_bytes)
         return pl.run(b, c, alpha, beta)
@@ -326,6 +342,7 @@ class SextansEngine:
         executable signature (G bucket-mates = 1 miss + G-1 hits — the
         HFlex story), but only one dispatch is issued.
         """
+        from repro.sparse_api import SKINNY_BACKENDS
         from repro.sparse_api import plan_group as _plan_group
         from repro.sparse_api import stack_hflex
 
@@ -350,6 +367,8 @@ class SextansEngine:
             self.stats.calls += g
             self.stats.dispatches += 1
             self.stats.group_calls += 1
+            if sig[-1] in SKINNY_BACKENDS:
+                self.stats.skinny_dispatches += 1
         pl = _plan_group(t, n, backend=self.impl, dtype=b.dtype,
                          tn=self.tn, interpret=self.interpret)
         return pl.run(b, c, alpha, beta)

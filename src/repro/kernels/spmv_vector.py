@@ -1,0 +1,234 @@
+"""Skinny-N Sextans lane: an SpMV-style Pallas TPU kernel.
+
+The paper's SNAP/SuiteSparse graph workloads degenerate to N = 1..8 dense
+columns, where the tall-N SpMM grid is the wrong shape (Serpens, PAPERS.md):
+a (MB, NT, NW) launch pads N up to TN = 128 lanes, re-streams every B window
+NT times, and wastes >90% of each gathered row on padding. This kernel drops
+the NT grid dimension entirely:
+
+* grid is ``(MB, NW)`` (``(G, MB, NW)`` batched) — the whole padded vector
+  block (K0 × NV, NV a handful of lanes) is resident in VMEM for the entire
+  PE pass over a window, fetched exactly once per (block, window);
+* the C stripe (TM × NV, fp32) lives in a VMEM scratch accumulator across
+  all windows, exactly like the SpMM kernel's URAM-analogue scratchpad;
+* slab processing, the one-hot MXU row scatter, the scalar-prefetched
+  pointer matrix ``q``, the traced (1, 2) SMEM α/β epilogue, and the
+  ``accumulate`` streaming mode are shared discipline with
+  :mod:`repro.kernels.sextans_spmm` — per-column math is identical, so the
+  lane is bit-compatible with the tall-N kernel and the jnp reference.
+
+``nv`` is the padded vector width (the lane's TN): callers round N up to a
+small multiple (default 8) so one compiled executable serves every skinny
+request.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import CompilerParams as _CompilerParams
+from ._compat import resolve_interpret as _resolve_interpret
+
+__all__ = ["sextans_spmv_pallas"]
+
+
+def _kernel(
+    q_ref,            # ([G,] MB, NW) int32, scalar prefetch (SMEM)
+    vals_ref,         # ([1,] 1, 1, LW) f32
+    cols_ref,         # ([1,] 1, 1, LW) i32
+    rows_ref,         # ([1,] 1, 1, LW) i32
+    b_ref,            # ([1,] K0, NV) — the whole (padded) vector block
+    cin_ref,          # ([1,] TM, NV)
+    ab_ref,           # (1, 2) f32 in SMEM: [alpha, beta] (traced epilogue)
+    out_ref,          # ([1,] TM, NV)
+    acc_ref,          # VMEM scratch (TM, NV) f32
+    *,
+    tm: int,
+    k0: int,
+    chunk: int,
+    nw: int,
+    gather: str,
+    batched: bool,
+    accumulate: bool,
+):
+    # Same body as the SpMM kernel minus the NT loop: program ids are
+    # ([g,] m, w) and every B window is visited exactly once.
+    off = 1 if batched else 0
+    w = pl.program_id(1 + off)
+
+    @pl.when(w == 0)
+    def _init():
+        if accumulate:
+            acc_ref[...] = (cin_ref[0] if batched
+                            else cin_ref[...]).astype(jnp.float32)
+        else:
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    m = pl.program_id(off)
+    if batched:
+        count = q_ref[pl.program_id(0), m, w]
+    else:
+        count = q_ref[m, w]
+
+    def _slab(ref, sl):
+        return ref[0, 0, 0, sl] if batched else ref[0, 0, sl]
+
+    def _tile(ref):
+        return ref[0] if batched else ref[...]
+
+    @pl.when(count > 0)
+    def _process_window():
+        nchunks = count // chunk
+        bwin = _tile(b_ref).astype(jnp.float32)  # (K0, NV) vector block
+        row_iota = jax.lax.broadcasted_iota(jnp.int32, (tm, chunk), 0)
+        col_iota = (jax.lax.broadcasted_iota(jnp.int32, (chunk, k0), 1)
+                    if gather == "onehot" else None)
+
+        def body(ci, acc):
+            sl = pl.ds(ci * chunk, chunk)
+            v = _slab(vals_ref, sl).astype(jnp.float32)       # (CH,)
+            c = _slab(cols_ref, sl)                           # (CH,)
+            r = _slab(rows_ref, sl)                           # (CH,)
+            if gather == "onehot":
+                oh_c = (col_iota == c[:, None]).astype(jnp.float32)
+                brows = jax.lax.dot_general(
+                    oh_c, bwin, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32,
+                )
+            else:
+                brows = bwin[c, :]                            # (CH, NV)
+            contrib = v[:, None] * brows                      # (CH, NV)
+            oh_r = (row_iota == r[None, :]).astype(jnp.float32)
+            return acc + jax.lax.dot_general(
+                oh_r, contrib, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+        acc_ref[...] = jax.lax.fori_loop(0, nchunks, body, acc_ref[...])
+
+    @pl.when(w == nw - 1)
+    def _epilogue():
+        if accumulate:
+            res = acc_ref[...].astype(out_ref.dtype)
+        else:
+            alpha = ab_ref[0, 0]
+            beta = ab_ref[0, 1]
+            res = (
+                alpha * acc_ref[...]
+                + beta * _tile(cin_ref).astype(jnp.float32)
+            ).astype(out_ref.dtype)
+        if batched:
+            out_ref[0] = res
+        else:
+            out_ref[...] = res
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("tm", "k0", "chunk", "nv", "gather", "interpret",
+                     "accumulate"),
+)
+def sextans_spmv_pallas(
+    vals: jax.Array,      # ([G,] MB, NW, LW) f32
+    cols: jax.Array,      # ([G,] MB, NW, LW) i32
+    rows: jax.Array,      # ([G,] MB, NW, LW) i32
+    q: jax.Array,         # ([G,] MB, NW) i32
+    b: jax.Array,         # ([G,] NW*K0, NV)
+    c_in: jax.Array,      # ([G,] MB*TM, NV)
+    alpha: jax.Array = 1.0,   # traced scalar
+    beta: jax.Array = 0.0,    # traced scalar
+    *,
+    tm: int,
+    k0: int,
+    chunk: int,
+    nv: int = 8,
+    gather: str = "gather",
+    interpret: Optional[bool] = None,
+    accumulate: bool = False,
+) -> jax.Array:
+    """Raw skinny-N kernel entry on pre-padded operands; ``nv`` is the padded
+    vector width (B and C arrive column-padded to exactly ``nv``).
+
+    Grid ``(MB, NW)`` / ``(G, MB, NW)``: no NT dimension, so each B window is
+    streamed HBM→VMEM once and the full vector stripe stays resident per PE
+    pass. Everything else — traced (1, 2) SMEM α/β, scalar-prefetched ``q``,
+    ``accumulate`` carrying a raw f32 accumulator for out-of-core streaming —
+    matches :func:`repro.kernels.sextans_spmm.sextans_spmm_pallas`; use
+    ``repro.sparse_api.spmm(..., backend="spmv")`` for the user-facing API.
+    """
+    interpret = _resolve_interpret(interpret)
+    if accumulate:
+        assert c_in.dtype == jnp.float32, "accumulate carries an f32 acc"
+    batched = vals.ndim == 4
+    mb, nw, lw = vals.shape[-3:]
+    kpad, npad = b.shape[-2:]
+    assert kpad == nw * k0, (kpad, nw, k0)
+    assert npad == nv, (npad, nv)
+    if batched:
+        g_sz = vals.shape[0]
+        assert q.shape == (g_sz, mb, nw)
+        assert b.shape == (g_sz, kpad, nv)
+        assert c_in.shape == (g_sz, mb * tm, nv)
+    else:
+        assert c_in.shape == (mb * tm, nv)
+
+    ab = jnp.stack(
+        [jnp.asarray(alpha, jnp.float32), jnp.asarray(beta, jnp.float32)]
+    ).reshape(1, 2)
+
+    kern = functools.partial(
+        _kernel,
+        tm=tm, k0=k0, chunk=chunk, nw=nw, gather=gather, batched=batched,
+        accumulate=accumulate,
+    )
+    out_dtype = jnp.float32 if accumulate else b.dtype
+    if batched:
+        grid = (g_sz, mb, nw)
+        in_specs = [
+            pl.BlockSpec((1, 1, 1, lw), lambda g, m, w, q_: (g, m, w, 0)),
+            pl.BlockSpec((1, 1, 1, lw), lambda g, m, w, q_: (g, m, w, 0)),
+            pl.BlockSpec((1, 1, 1, lw), lambda g, m, w, q_: (g, m, w, 0)),
+            pl.BlockSpec((1, k0, nv), lambda g, m, w, q_: (g, w, 0)),
+            pl.BlockSpec((1, tm, nv), lambda g, m, w, q_: (g, m, 0)),
+            pl.BlockSpec((1, 2), lambda g, m, w, q_: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ]
+        out_specs = pl.BlockSpec((1, tm, nv), lambda g, m, w, q_: (g, m, 0))
+        out_shape = jax.ShapeDtypeStruct((g_sz, mb * tm, nv), out_dtype)
+        semantics = ("parallel", "parallel", "arbitrary")
+    else:
+        grid = (mb, nw)
+        in_specs = [
+            pl.BlockSpec((1, 1, lw), lambda m, w, q_: (m, w, 0)),
+            pl.BlockSpec((1, 1, lw), lambda m, w, q_: (m, w, 0)),
+            pl.BlockSpec((1, 1, lw), lambda m, w, q_: (m, w, 0)),
+            pl.BlockSpec((k0, nv), lambda m, w, q_: (w, 0)),
+            pl.BlockSpec((tm, nv), lambda m, w, q_: (m, 0)),
+            pl.BlockSpec((1, 2), lambda m, w, q_: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ]
+        out_specs = pl.BlockSpec((tm, nv), lambda m, w, q_: (m, 0))
+        out_shape = jax.ShapeDtypeStruct((mb * tm, nv), out_dtype)
+        semantics = ("parallel", "arbitrary")
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((tm, nv), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=semantics,
+        ),
+    )(q, vals, cols, rows, b, c_in, ab)

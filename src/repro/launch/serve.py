@@ -66,7 +66,7 @@ import numpy as np
 from repro.core.async_pipeline import PackExecutePipeline, SpmmFuture
 from repro.core.engine import SextansEngine
 from repro.core.sparse import SparseMatrix
-from repro.sparse_api import stack_hflex
+from repro.sparse_api import SKINNY_BACKENDS, resolve_backend, stack_hflex
 
 __all__ = ["SpmmRequest", "SpmmFuture", "SpmmScheduler",
            "serve_spmm_requests", "lm_generate"]
@@ -114,6 +114,8 @@ class _FlushCounters:
     batched: int = 0
     streamed: int = 0
     window_disp: int = 0
+    n_tiles: int = 0          # column-tile high-water among streamed requests
+    skinny: int = 0           # dispatches that resolved to the SpMV lane
     peak: int = 0
 
 
@@ -151,10 +153,12 @@ class SpmmScheduler:
 
     ``device_bytes`` adds the *out-of-core streaming lane*: a request whose
     packed payload exceeds the budget bypasses group stacking and executes
-    through :meth:`SextansEngine.spmm_streaming` — K0-window chunks through
-    a persistent C accumulator, multiple dispatches per request, still
-    bit-identical.  Oversized traffic therefore no longer fails or pins
-    more device memory than exists; it just rides the streaming tier.
+    through :meth:`SextansEngine.spmm_streaming` — a 2-D (K-window ×
+    N-tile) grid of chunks through a persistent C-stripe accumulator,
+    multiple dispatches per request, still bit-identical (``n_tile``
+    overrides the plan's column-tile width).  Oversized traffic therefore
+    no longer fails or pins more device memory than exists; it just rides
+    the streaming tier.
 
     ``stats`` accumulates across flushes:
 
@@ -162,13 +166,18 @@ class SpmmScheduler:
       compiled calls issued.  ``dispatches`` counts *every* compiled call
       consistently at request granularity: a group contributes 1 for its G
       members together, a singleton 1, and a streamed request its
-      ``window steps + 1`` (so ``dispatches_per_request`` < 1 measures
-      batching amortization and > 1 measures streaming depth);
+      ``window_dispatches + n_tiles`` (one epilogue per column tile; so
+      ``dispatches_per_request`` < 1 measures batching amortization and
+      > 1 measures streaming depth);
     * ``batched_requests`` → ``batched_fraction`` — how much traffic rode
       a group dispatch;
-    * ``streamed`` / ``window_dispatches`` / ``peak_payload_bytes`` — the
-      streaming lane: requests routed, window-chunk dispatches issued, and
-      the device working-set high-water of any streamed request;
+    * ``streamed`` / ``window_dispatches`` / ``n_tiles`` /
+      ``peak_payload_bytes`` — the streaming lane: requests routed,
+      window-chunk dispatches issued (summed over column tiles), the
+      column-tile high-water, and the device working-set high-water of any
+      streamed request;
+    * ``skinny_dispatches`` — dispatches (singleton or group) that
+      resolved to the skinny-N SpMV lane (``SKINNY_BACKENDS``);
     * ``preprocess_s`` vs ``wall_s`` — pack() time separated from
       execution, the paper's preprocessing/execution split;
     * ``overlap_s`` / ``pack_stall_s`` — async mode: pack time hidden
@@ -191,6 +200,7 @@ class SpmmScheduler:
                  max_group: int = 64,
                  device_bytes: Optional[int] = None,
                  window_chunk: Optional[int] = None,
+                 n_tile: Optional[int] = None,
                  async_pipeline: bool = False,
                  pack_threads: Optional[int] = None):
         self.engine = engine or SextansEngine(tm=128, k0=512, chunk=8,
@@ -200,6 +210,7 @@ class SpmmScheduler:
         self.max_group = max_group
         self.device_bytes = device_bytes
         self.window_chunk = window_chunk
+        self.n_tile = n_tile
         self.async_pipeline = bool(async_pipeline)
         self._pipe = (PackExecutePipeline(pack_threads)
                       if self.async_pipeline else None)
@@ -213,6 +224,8 @@ class SpmmScheduler:
             "batched_requests": 0,
             "streamed": 0,
             "window_dispatches": 0,
+            "n_tiles": 0,
+            "skinny_dispatches": 0,
             "peak_payload_bytes": 0,
             "failed": 0,
             "flushes": 0,
@@ -360,15 +373,25 @@ class SpmmScheduler:
 
     # -- dispatch stage ------------------------------------------------------
 
-    def _dispatch_single(self, e: _Entry, results: Dict) -> None:
+    def _count_skinny(self, tensor, b, ctr: _FlushCounters) -> None:
+        """Bump ``ctr.skinny`` when this dispatch resolves to the SpMV
+        lane — the same resolution (operand included) the engine performs."""
+        if resolve_backend(self.engine.impl, tensor, b) in SKINNY_BACKENDS:
+            ctr.skinny += 1
+
+    def _dispatch_single(self, e: _Entry, results: Dict,
+                         ctr: _FlushCounters) -> None:
         r = e.request
+        self._count_skinny(e.tensor, r.b, ctr)
         out = self.engine.spmm(
             e.tensor, jnp.asarray(r.b),
             None if r.c is None else jnp.asarray(r.c), r.alpha, r.beta)
         results[e.ticket] = (out, r.a.shape[0], r.b.shape[1])
 
-    def _dispatch_group(self, chunk: List[_Entry], prep, results: Dict) -> None:
+    def _dispatch_group(self, chunk: List[_Entry], prep, results: Dict,
+                        ctr: _FlushCounters) -> None:
         stacked, bg, cg, alpha, beta = prep
+        self._count_skinny(stacked, bg, ctr)
         out = self.engine.spmm_group(
             stacked, jnp.asarray(bg),
             None if cg is None else jnp.asarray(cg), alpha, beta)
@@ -382,12 +405,14 @@ class SpmmScheduler:
         out = self.engine.spmm_streaming(
             e.tensor, r.b, None if r.c is None else jnp.asarray(r.c),
             r.alpha, r.beta, device_bytes=self.device_bytes,
-            window_chunk=self.window_chunk)
+            window_chunk=self.window_chunk, n_tile=self.n_tile)
         # per-call stats from the plan this exact call ran through —
         # not the engine's lifetime aggregates
         pl = self.engine.last_streaming_plan
-        ctr.dispatches += pl.steps + 1         # window steps + epilogue
-        ctr.window_disp += pl.steps
+        # window steps (summed over column tiles) + one epilogue per tile
+        ctr.dispatches += pl.window_dispatches + pl.n_tiles
+        ctr.window_disp += pl.window_dispatches
+        ctr.n_tiles = max(ctr.n_tiles, pl.n_tiles)
         ctr.peak = max(ctr.peak, pl.peak_payload_bytes)
         ctr.streamed += 1
         results[e.ticket] = (out, r.a.shape[0], r.b.shape[1])
@@ -443,11 +468,11 @@ class SpmmScheduler:
                 ctr.groups += 1
                 ctr.dispatches += 1
                 if len(chunk) == 1:
-                    self._dispatch_single(chunk[0], results)
+                    self._dispatch_single(chunk[0], results, ctr)
                 else:
                     prep, dt = self._prep_group(key, chunk)
                     pack_s += dt
-                    self._dispatch_group(chunk, prep, results)
+                    self._dispatch_group(chunk, prep, results, ctr)
                     ctr.batched += len(chunk)
         for e in stream_lane:
             self._dispatch_stream(e, results, ctr)
@@ -541,7 +566,7 @@ class SpmmScheduler:
         for chunk in singles:           # no host prep — dispatch first
             e = chunk[0]
             try:
-                self._dispatch_single(e, results)
+                self._dispatch_single(e, results, ctr)
                 ctr.groups += 1
                 ctr.dispatches += 1
             except Exception as exc:    # noqa: BLE001
@@ -557,7 +582,7 @@ class SpmmScheduler:
                 try:
                     prep, dt = f.result()
                     pack_s += dt
-                    self._dispatch_group(chunk, prep, results)
+                    self._dispatch_group(chunk, prep, results, ctr)
                     ctr.groups += 1
                     ctr.dispatches += 1
                     ctr.batched += len(chunk)
@@ -607,6 +632,8 @@ class SpmmScheduler:
             st["batched_requests"] += ctr.batched
             st["streamed"] += ctr.streamed
             st["window_dispatches"] += ctr.window_disp
+            st["n_tiles"] = max(st["n_tiles"], ctr.n_tiles)
+            st["skinny_dispatches"] += ctr.skinny
             st["peak_payload_bytes"] = max(st["peak_payload_bytes"], ctr.peak)
             st["failed"] += failed
             st["flushes"] += 1
@@ -622,6 +649,8 @@ class SpmmScheduler:
                 "batched_requests": ctr.batched,
                 "streamed": ctr.streamed,
                 "window_dispatches": ctr.window_disp,
+                "n_tiles": ctr.n_tiles,
+                "skinny_dispatches": ctr.skinny,
                 "failed": failed,
                 "wall_s": wall,
                 "preprocess_s": pack_s,
@@ -664,6 +693,7 @@ def serve_spmm_requests(
     max_group: int = 64,
     device_bytes: Optional[int] = None,
     window_chunk: Optional[int] = None,
+    n_tile: Optional[int] = None,
 ) -> Tuple[List[np.ndarray], Dict[str, Any]]:
     """Run a pool of SpMM requests; returns results + serving stats.
 
@@ -680,8 +710,11 @@ def serve_spmm_requests(
 
     Stats report the HFlex executable-cache hit rate, the grouping
     behaviour (``groups``, ``batched_fraction``, ``dispatches_per_request``),
-    the streaming lane (``streamed``, ``window_dispatches``,
-    ``peak_payload_bytes``), the pipeline overlap (``overlap_s``,
+    the streaming lane (``streamed``, ``window_dispatches``, ``n_tiles``,
+    ``peak_payload_bytes`` — ``n_tile`` forces/overrides the column-tile
+    width of streamed requests), the skinny-N SpMV lane
+    (``skinny_dispatches`` — dispatches that resolved to a
+    ``SKINNY_BACKENDS`` member), the pipeline overlap (``overlap_s``,
     ``pack_hidden_fraction`` — zero outside async mode) and both
     ``gflops`` (wall clock including ``pack()`` preprocessing) and
     ``compute_gflops`` (wall − *non-hidden* preprocessing — the paper
@@ -694,6 +727,8 @@ def serve_spmm_requests(
     exec0 = PLAN_STATS["exec_misses"]
     streamed = 0
     window_dispatches = 0
+    n_tiles = 0
+    skinny_dispatches = 0
     peak_payload = 0
     overlap_s = 0.0
     pack_hidden_fraction = 0.0
@@ -701,7 +736,7 @@ def serve_spmm_requests(
     if async_pipeline:
         sched = SpmmScheduler(engine, max_group=max_group,
                               device_bytes=device_bytes,
-                              window_chunk=window_chunk,
+                              window_chunk=window_chunk, n_tile=n_tile,
                               async_pipeline=True,
                               pack_threads=pack_threads)
         try:
@@ -719,13 +754,15 @@ def serve_spmm_requests(
         dispatches_per_request = sched.dispatches_per_request
         streamed = sched.stats["streamed"]
         window_dispatches = sched.stats["window_dispatches"]
+        n_tiles = sched.stats["n_tiles"]
+        skinny_dispatches = sched.stats["skinny_dispatches"]
         peak_payload = sched.stats["peak_payload_bytes"]
         overlap_s = sched.stats["overlap_s"]
         pack_hidden_fraction = sched.pack_hidden_fraction
     elif batched:
         sched = SpmmScheduler(engine, max_group=max_group,
                               device_bytes=device_bytes,
-                              window_chunk=window_chunk)
+                              window_chunk=window_chunk, n_tile=n_tile)
         for r in requests:
             sched.submit(r)
         outs = sched.flush()
@@ -737,6 +774,8 @@ def serve_spmm_requests(
         dispatches_per_request = sched.dispatches_per_request
         streamed = sched.stats["streamed"]
         window_dispatches = sched.stats["window_dispatches"]
+        n_tiles = sched.stats["n_tiles"]
+        skinny_dispatches = sched.stats["skinny_dispatches"]
         peak_payload = sched.stats["peak_payload_bytes"]
     else:
         outs = []
@@ -746,6 +785,7 @@ def serve_spmm_requests(
         t0 = time.perf_counter()
         pack_s = 0.0
         dispatches = 0
+        skinny0 = engine.stats.skinny_dispatches
         for r in requests:
             tp = time.perf_counter()
             packed = engine.pack(r.a)
@@ -756,17 +796,20 @@ def serve_spmm_requests(
                 # over-budget payload must never be pinned resident
                 out = engine.spmm_streaming(
                     packed, r.b, c, r.alpha, r.beta,
-                    device_bytes=device_bytes, window_chunk=window_chunk)
+                    device_bytes=device_bytes, window_chunk=window_chunk,
+                    n_tile=n_tile)
                 pl = engine.last_streaming_plan
                 streamed += 1
-                window_dispatches += pl.steps
+                window_dispatches += pl.window_dispatches
+                n_tiles = max(n_tiles, pl.n_tiles)
                 peak_payload = max(peak_payload, pl.peak_payload_bytes)
-                dispatches += pl.steps + 1
+                dispatches += pl.window_dispatches + pl.n_tiles
             else:
                 out = engine.spmm(packed, jnp.asarray(r.b), c,
                                   r.alpha, r.beta)
                 dispatches += 1
             outs.append(out)
+        skinny_dispatches = engine.stats.skinny_dispatches - skinny0
         for out in outs:
             jax.block_until_ready(out)
         wall = time.perf_counter() - t0
@@ -790,6 +833,8 @@ def serve_spmm_requests(
         "dispatches_per_request": dispatches_per_request,
         "streamed": streamed,
         "window_dispatches": window_dispatches,
+        "n_tiles": n_tiles,
+        "skinny_dispatches": skinny_dispatches,
         "peak_payload_bytes": peak_payload,
         "executable_cache_hit_rate": engine.stats.hit_rate,
         "cache_misses": engine.stats.cache_misses,

@@ -32,6 +32,8 @@ accumulation).
 
 from .backends import (
     BACKEND_STATS,
+    SKINNY_BACKENDS,
+    SKINNY_N_MAX,
     Backend,
     StreamOps,
     get_backend,
@@ -94,4 +96,6 @@ __all__ = [
     "resolve_backend",
     "set_auto_policy",
     "BACKEND_STATS",
+    "SKINNY_N_MAX",
+    "SKINNY_BACKENDS",
 ]

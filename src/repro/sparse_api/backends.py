@@ -12,8 +12,14 @@ name:
                       (guaranteed-lowerable on any MXU; HFLEX only).
 * ``jnp``           — segment-sum / einsum XLA path; also the CPU
                       production path and the autodiff reference.
-* ``auto``          — resolves to one of the above from platform, format and
-                      density (override with :func:`set_auto_policy`).
+* ``spmv``          — skinny-N (N ≤ ``SKINNY_N_MAX``) vector lane: Pallas
+                      kernel with no NT grid dimension, the vector stripe
+                      resident per PE pass (Serpens-style; HFLEX only).
+* ``spmv_jnp``      — flat-jnp twin of the skinny lane (bit-identical to
+                      ``jnp``; the off-TPU production path for SpMV shapes).
+* ``auto``          — resolves to one of the above from platform, format,
+                      density and the dense-operand width N (override with
+                      :func:`set_auto_policy`).
 
 ``register_backend`` is the extension point the ROADMAP's multi-workload
 north star needs: a Serpens-style SpMV/CSR or SpArch-style merge format
@@ -34,6 +40,7 @@ from repro.core.partition import cdiv
 from repro.kernels.bsr_spmm import bsr_matmul_pallas
 from repro.kernels.ref import bsr_matmul_ref
 from repro.kernels.sextans_spmm import sextans_spmm_pallas
+from repro.kernels.spmv_vector import sextans_spmv_pallas
 
 from .tensor import Format, SparseTensor
 
@@ -47,7 +54,18 @@ __all__ = [
     "resolve_backend",
     "set_auto_policy",
     "BACKEND_STATS",
+    "SKINNY_N_MAX",
+    "SKINNY_BACKENDS",
 ]
+
+# The auto policy routes HFLEX requests with N at or below this width to the
+# dedicated SpMV lane ("spmv" on TPU, its flat-jnp twin elsewhere) — the
+# paper's SNAP/SuiteSparse graph workloads live at N = 1..8.
+SKINNY_N_MAX = 8
+
+# Backend names that constitute the skinny lane (engine/scheduler stats
+# count dispatches routed through them as ``skinny_dispatches``).
+SKINNY_BACKENDS = frozenset({"spmv", "spmv_jnp"})
 
 # Incremented once per *trace* of a backend body (i.e. per compiled
 # executable, not per call) — the JAX analogue of the paper counting
@@ -87,6 +105,16 @@ class StreamOps:
       device.
     * ``collect(a, acc, n) -> raw``          — accumulator back to the
       logical (M, N) f32 array (un-permute/slice for kernel layouts).
+
+    2-D (K-window × N-tile) streaming calls each hook once **per column
+    tile**, with ``n`` the tile's true width and ``b_chunk`` carrying only
+    that tile's columns; the traced streaming entry additionally passes the
+    column-tile index as a ``tile=`` keyword (hooks must accept and may
+    ignore it — all built-ins absorb it via ``**_unused``).  Hooks must be
+    tile-position-independent: the plan tier compiles ONE step executable
+    and reuses it for every tile, including an inertly column-padded tail
+    tile (padding columns accumulate garbage that ``collect``'s final slice
+    drops — per-column math is independent, so real columns are untouched).
 
     The epilogue ``(alpha * raw + beta * c).astype(b.dtype)`` is shared
     (:func:`stream_finish`), matching both backends' resident epilogues
@@ -158,9 +186,25 @@ def list_backends() -> List[str]:
     return sorted(_REGISTRY)
 
 
-def _default_auto_policy(a: SparseTensor, b, platform: Optional[str] = None) -> str:
-    """Pick a backend from platform / format / density.
+def _operand_width(b) -> Optional[int]:
+    """Trailing (column) width of a dense operand, or None when unknowable.
 
+    Accepts arrays, ShapeDtypeStructs and numpy operands; a 1-D ``b`` (the
+    ``A @ v`` matvec path reshapes it later) counts as width 1.
+    """
+    shape = getattr(b, "shape", None)
+    if shape is None or len(shape) == 0:
+        return None
+    return 1 if len(shape) == 1 else int(shape[-1])
+
+
+def _default_auto_policy(a: SparseTensor, b, platform: Optional[str] = None) -> str:
+    """Pick a backend from platform / format / density / dense width N.
+
+    * HFLEX requests whose dense operand is skinny (N ≤ ``SKINNY_N_MAX``)
+      are SpMV-shaped: they take the dedicated vector lane — ``spmv`` on
+      TPU, its flat-jnp twin elsewhere (unless density already rules the
+      slab format out, below);
     * off-TPU the Pallas kernels run in interpret mode — the XLA ``jnp``
       path is the production one;
     * on TPU, BSR always goes to the tile kernel;
@@ -168,6 +212,10 @@ def _default_auto_policy(a: SparseTensor, b, platform: Optional[str] = None) -> 
       so they fall back to the XLA path too.
     """
     platform = platform or jax.default_backend()
+    n = _operand_width(b)
+    if (a.format is Format.HFLEX and n is not None and n <= SKINNY_N_MAX
+            and not (platform == "tpu" and a.density > 0.25)):
+        return "spmv" if platform == "tpu" else "spmv_jnp"
     if platform != "tpu":
         return "jnp"
     if a.format is Format.BSR:
@@ -191,10 +239,16 @@ def set_auto_policy(policy: Optional[Callable]) -> None:
 
 
 def resolve_backend(name: str, a: SparseTensor, b=None,
-                    platform: Optional[str] = None) -> str:
+                    platform: Optional[str] = None,
+                    n: Optional[int] = None) -> str:
     """Resolve a requested backend name ('auto' included) for tensor ``a``,
-    validating format support.  ``b`` may be None (pre-operand resolution)."""
+    validating format support.  ``b`` may be None (pre-operand resolution);
+    when only the dense width is known, pass ``n=`` and a shape-only stub
+    operand is synthesized so N-aware policies (and custom policies with the
+    ``(a, b, platform)`` signature) still see it."""
     if name == "auto":
+        if b is None and n is not None:
+            b = jax.ShapeDtypeStruct((a.shape[1], int(n)), jnp.float32)
         name = _AUTO_POLICY(a, b, platform)
     be = get_backend(name)
     if a.format not in be.formats:
@@ -321,6 +375,29 @@ def _hflex_pallas(a: SparseTensor, b, c, alpha, beta, *, gather, tn, interpret):
     return out[..., :m, :n]
 
 
+def _hflex_spmv(a: SparseTensor, b, c, alpha, beta, *, gather, nv, interpret):
+    """Skinny-N vector lane: pad the dense operands to ``nvp`` columns (a
+    small multiple of ``nv``, NOT the tall-N TN=128) and launch the
+    NT-less kernel — each B window streamed once, vector stripe resident."""
+    d = a.data
+    m, k, tm, k0, mb, nw = d.m, d.k, d.tm, d.k0, d.mb, d.nw
+    n = b.shape[-1]
+    nvp = cdiv(n, nv) * nv
+    lead_pad = ((0, 0),) if d.batch is not None else ()
+    bp = jnp.pad(b, (*lead_pad, (0, nw * k0 - k), (0, nvp - n)))
+    cp = jnp.pad(c, (*lead_pad, (0, mb * tm - m), (0, nvp - n)))
+    if d.interleaved:
+        cp = _permute_rows_fwd(cp, mb, tm)
+    out = sextans_spmv_pallas(
+        d.vals, d.cols, d.rows, d.q, bp, cp, alpha, beta,
+        tm=tm, k0=k0, chunk=d.chunk, nv=nvp, gather=gather,
+        interpret=interpret,
+    )
+    if d.interleaved:
+        out = _permute_rows_inv(out, mb, tm)
+    return out[..., :m, :n]
+
+
 # -- out-of-core streaming hooks (K0-window chunk accumulation) -------------
 
 
@@ -384,12 +461,45 @@ def _hflex_pallas_stream_collect(a: SparseTensor, acc, n: int, **_unused):
     return acc[..., :a.shape[0], :n]
 
 
+def _hflex_spmv_stream_init(a: SparseTensor, n: int, *, nv=8, **_unused):
+    d = a.data
+    nvp = cdiv(n, nv) * nv
+    return jnp.zeros((d.mb * d.tm, nvp), jnp.float32)
+
+
+def _hflex_spmv_stream_step(a_chunk: SparseTensor, b_chunk, acc, *,
+                            gather="gather", nv=8, interpret=None,
+                            **_unused):
+    """Accumulate-mode launch of the skinny lane over the chunk's NW grid —
+    the SpMV twin of :func:`_hflex_pallas_stream_step` (same carried-acc
+    discipline, vector-width padding instead of TN)."""
+    d = a_chunk.data
+    nvp = acc.shape[-1]
+    kc, nc = b_chunk.shape
+    bp = jnp.pad(b_chunk, ((0, d.nw * d.k0 - kc), (0, nvp - nc)))
+    return sextans_spmv_pallas(
+        d.vals, d.cols, d.rows, d.q, bp, acc,
+        tm=d.tm, k0=d.k0, chunk=d.chunk, nv=nvp, gather=gather,
+        interpret=interpret, accumulate=True,
+    )
+
+
+def _hflex_spmv_stream_collect(a: SparseTensor, acc, n: int, **_unused):
+    d = a.data
+    if d.interleaved:
+        acc = _permute_rows_inv(acc, d.mb, d.tm)
+    return acc[..., :a.shape[0], :n]
+
+
 _JNP_STREAM = StreamOps(init=_hflex_jnp_stream_init,
                         step=_hflex_jnp_stream_step,
                         collect=_hflex_jnp_stream_collect)
 _PALLAS_STREAM = StreamOps(init=_hflex_pallas_stream_init,
                            step=_hflex_pallas_stream_step,
                            collect=_hflex_pallas_stream_collect)
+_SPMV_STREAM = StreamOps(init=_hflex_spmv_stream_init,
+                         step=_hflex_spmv_stream_step,
+                         collect=_hflex_spmv_stream_collect)
 
 
 def _bsr_raw_jnp(a: SparseTensor, b):
@@ -445,6 +555,22 @@ def _backend_pallas_onehot(a, b, c, alpha, beta, *, tn=128, interpret=None,
                          interpret=interpret)
 
 
+def _backend_spmv(a, b, c, alpha, beta, *, gather="gather", nv=8,
+                  interpret=None, **_unused):
+    bump_trace()
+    return _hflex_spmv(a, b, c, alpha, beta, gather=gather, nv=nv,
+                       interpret=interpret)
+
+
+def _backend_spmv_jnp(a, b, c, alpha, beta, **_unused):
+    # The flat segment-sum body needs no N padding at all, so it already IS
+    # the optimal skinny shape — register it under its own name so routing,
+    # plan keys and stats can distinguish the lane, while results stay
+    # bit-identical to "jnp" by construction (same function).
+    bump_trace()
+    return _hflex_jnp(a, b, c, alpha, beta)
+
+
 register_backend(
     "pallas", _backend_pallas,
     formats=(Format.HFLEX, Format.BSR),
@@ -462,4 +588,15 @@ register_backend(
     "jnp", _backend_jnp,
     formats=(Format.HFLEX, Format.BSR),
     description="XLA segment-sum/einsum path (CPU production + autodiff ref)",
+    stream=_JNP_STREAM)
+register_backend(
+    "spmv", _backend_spmv,
+    formats=(Format.HFLEX,),
+    description="skinny-N vector lane: NT-less Pallas kernel, vector "
+                "stripe resident per PE pass",
+    stream=_SPMV_STREAM)
+register_backend(
+    "spmv_jnp", _backend_spmv_jnp,
+    formats=(Format.HFLEX,),
+    description="skinny-N lane, flat-jnp twin (bit-identical to 'jnp')",
     stream=_JNP_STREAM)

@@ -128,63 +128,95 @@ def _stream_bounds(nw: int, wchunk: int):
     return [(w0, min(nw, w0 + wchunk)) for w0 in range(0, nw, wchunk)]
 
 
-def _stream_raw(name, okey, wchunk, a, b):
+def _tile_bounds(n: int, ntile: int):
+    return [(n0, min(n, n0 + ntile)) for n0 in range(0, n, ntile)]
+
+
+def _stream_raw(name, okey, wchunk, ntile, a, b):
     """Raw accumulated ``A @ b`` (logical (M, N) f32) via the backend's
-    window-chunk streaming hooks — the exact add sequence of the resident
-    path, split at chunk boundaries (see backends.StreamOps)."""
+    streaming hooks over the 2-D (N-tile × K-window-chunk) grid — column
+    tiles outer, window chunks inner, the same walk :class:`StreamingPlan`
+    makes.  Per-column math is independent and each column's add sequence
+    is the resident path's, so the result is bit-identical for every
+    (wchunk, ntile) — see backends.StreamOps.  Tiles are sliced at their
+    true width (no padding needed in-trace); hooks receive the column-tile
+    index as ``tile=``."""
     stream = _bk.get_backend(name).stream
     opts = dict(okey)
     d = a.data
-    acc = stream.init(a, b.shape[-1], **opts)
-    for w0, w1 in _stream_bounds(d.nw, wchunk):
-        a_w = a.windows(w0, w1)
-        b_w = jax.lax.slice_in_dim(b, w0 * d.k0, w0 * d.k0 + a_w.k, axis=0)
-        acc = stream.step(a_w, b_w, acc, **opts)
-    return stream.collect(a, acc, b.shape[-1], **opts)
+    n = b.shape[-1]
+    stripes = []
+    for j, (n0, n1) in enumerate(_tile_bounds(n, ntile)):
+        b_t = (b if (n0, n1) == (0, n)
+               else jax.lax.slice_in_dim(b, n0, n1, axis=1))
+        acc = stream.init(a, n1 - n0, tile=j, **opts)
+        for w0, w1 in _stream_bounds(d.nw, wchunk):
+            a_w = a.windows(w0, w1)
+            b_w = jax.lax.slice_in_dim(b_t, w0 * d.k0, w0 * d.k0 + a_w.k,
+                                       axis=0)
+            acc = stream.step(a_w, b_w, acc, tile=j, **opts)
+        stripes.append(stream.collect(a, acc, n1 - n0, tile=j, **opts))
+    if len(stripes) == 1:
+        return stripes[0]
+    return jnp.concatenate(stripes, axis=-1)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2))
-def _stream_core(name, okey, wchunk, a, b, c, alpha, beta):
-    raw = _stream_raw(name, okey, wchunk, a, b)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3))
+def _stream_core(name, okey, wchunk, ntile, a, b, c, alpha, beta):
+    raw = _stream_raw(name, okey, wchunk, ntile, a, b)
     return _bk.stream_finish(raw, c, alpha, beta, b.dtype)
 
 
-def _stream_fwd(name, okey, wchunk, a, b, c, alpha, beta):
-    raw = _stream_raw(name, okey, wchunk, a, b)
+def _stream_fwd(name, okey, wchunk, ntile, a, b, c, alpha, beta):
+    raw = _stream_raw(name, okey, wchunk, ntile, a, b)
     out = _bk.stream_finish(raw, c, alpha, beta, b.dtype)
     return out, (a, b, c, alpha, beta, raw)
 
 
-def _stream_bwd(name, okey, wchunk, res, g):
-    """Per-chunk cotangent accumulation: the backward pass walks the same
-    K0-window chunks as the forward, so at no point does it need more than
-    one chunk's slab payload / ``b`` rows in flight — streaming stays
-    differentiable without resurrecting the resident working set.  Each
-    chunk's ``d vals`` is masked by its own true counts (``nse`` rides the
-    window slice), exactly like the single-shot VJP."""
+def _stream_bwd(name, okey, wchunk, ntile, res, g):
+    """Per-tile, per-chunk cotangent accumulation: the backward pass walks
+    the same 2-D (N-tile × K-window-chunk) grid as the forward, so at no
+    point does it need more than one tile-chunk's slab payload / ``b``
+    block in flight — streaming stays differentiable without resurrecting
+    the resident working set.  Each chunk's ``d vals`` is masked by its
+    own true counts (``nse`` rides the window slice), exactly like the
+    single-shot VJP; tiles contribute disjoint ``d b`` columns
+    (concatenated) and sum into the shared ``d vals``."""
     a, b, c, alpha, beta, raw = res
     g32 = g.astype(jnp.float32)
-    ct = alpha * g32
+    ct_full = alpha * g32
     d = a.data
-    dvals_chunks = []
-    db_chunks = []
-    for w0, w1 in _stream_bounds(d.nw, wchunk):
-        a_w = a.windows(w0, w1)
-        b_w = jax.lax.slice_in_dim(b, w0 * d.k0, w0 * d.k0 + a_w.k, axis=0)
+    n = b.shape[-1]
+    dvals = None
+    db_tiles = []
+    for n0, n1 in _tile_bounds(n, ntile):
+        ct = (ct_full if (n0, n1) == (0, n)
+              else jax.lax.slice_in_dim(ct_full, n0, n1, axis=1))
+        b_t = (b if (n0, n1) == (0, n)
+               else jax.lax.slice_in_dim(b, n0, n1, axis=1))
+        dvals_chunks = []
+        db_chunks = []
+        for w0, w1 in _stream_bounds(d.nw, wchunk):
+            a_w = a.windows(w0, w1)
+            b_w = jax.lax.slice_in_dim(b_t, w0 * d.k0, w0 * d.k0 + a_w.k,
+                                       axis=0)
 
-        def raw_fn(vals, b_, a_w=a_w):
-            return _raw_reference(a_w.with_values(vals), b_)
+            def raw_fn(vals, b_, a_w=a_w):
+                return _raw_reference(a_w.with_values(vals), b_)
 
-        _, vjp = jax.vjp(raw_fn, a_w.values, b_w)
-        dv, db_w = vjp(ct)
-        d_w = a_w.data
-        valid = (jax.lax.broadcasted_iota(jnp.int32, d_w.vals.shape,
-                                          d_w.vals.ndim - 1)
-                 < d_w.nse[..., None])
-        dvals_chunks.append(jnp.where(valid, dv, 0))
-        db_chunks.append(db_w)
-    dvals = jnp.concatenate(dvals_chunks, axis=-2)
-    db = jnp.concatenate(db_chunks, axis=0).astype(b.dtype)
+            _, vjp = jax.vjp(raw_fn, a_w.values, b_w)
+            dv, db_w = vjp(ct)
+            d_w = a_w.data
+            valid = (jax.lax.broadcasted_iota(jnp.int32, d_w.vals.shape,
+                                              d_w.vals.ndim - 1)
+                     < d_w.nse[..., None])
+            dvals_chunks.append(jnp.where(valid, dv, 0))
+            db_chunks.append(db_w)
+        dv_t = jnp.concatenate(dvals_chunks, axis=-2)
+        dvals = dv_t if dvals is None else dvals + dv_t
+        db_tiles.append(jnp.concatenate(db_chunks, axis=0))
+    db = (db_tiles[0] if len(db_tiles) == 1
+          else jnp.concatenate(db_tiles, axis=1)).astype(b.dtype)
     dc = (beta * g32).astype(c.dtype)
     dalpha = jnp.sum(g32 * raw).astype(alpha.dtype)
     dbeta = jnp.sum(g32 * c.astype(jnp.float32)).astype(beta.dtype)
@@ -195,7 +227,7 @@ def _stream_bwd(name, okey, wchunk, res, g):
 
 _stream_core.defvjp(_stream_fwd, _stream_bwd)
 
-_stream_jit = jax.jit(_stream_core, static_argnums=(0, 1, 2))
+_stream_jit = jax.jit(_stream_core, static_argnums=(0, 1, 2, 3))
 
 
 def spmm_streaming(
@@ -206,26 +238,33 @@ def spmm_streaming(
     beta=0.0,
     *,
     window_chunk: int = 1,
+    n_tile: Optional[int] = None,
     backend: str = "auto",
     **opts,
 ) -> jax.Array:
-    """``alpha * A @ b + beta * c`` executed as a K0-window-chunk stream.
+    """``alpha * A @ b + beta * c`` executed as a 2-D (K-window × N-tile)
+    stream.
 
     The differentiable twin of :class:`repro.sparse_api.StreamingPlan`:
     the matrix is consumed ``window_chunk`` K0-windows at a time against a
-    carried f32 accumulator, with the epilogue applied once at the end —
-    results are **bit-identical** to :func:`spmm` on the same backend for
-    every chunk size, and the custom VJP walks the same chunks,
-    accumulating cotangents chunk by chunk (see ``_stream_bwd``).
+    carried f32 accumulator — per column tile of ``n_tile`` B columns
+    (default: all of them, the 1-D K-only stream) — with the epilogue
+    applied once per tile at the end of its window walk.  Results are
+    **bit-identical** to :func:`spmm` on the same backend for every
+    (chunk size, tile width): per-column math is independent, so tiling N
+    never reassociates any column's add sequence.  The custom VJP walks
+    the same 2-D grid, accumulating cotangents tile by tile and chunk by
+    chunk (see ``_stream_bwd``).
 
-    Scope: this bounds the per-chunk *intermediates* (the window's B rows
-    in flight, the contribution scatter, each chunk's cotangent) — ``a``,
-    ``b`` and the saved residuals are still whole-array jit operands, and
-    the trace unrolls ``ceil(NW / window_chunk)`` chunk bodies.  For
-    matrices that genuinely exceed device memory use :func:`plan` with
-    ``device_bytes=`` (host-side payload staging, one compiled window-step
-    executable); this entry point is for *training* with windowed-execution
-    semantics and for pinning the streaming tier's bit-identity.
+    Scope: this bounds the per-tile-chunk *intermediates* (the block of
+    ``b`` in flight, the contribution scatter, each chunk's cotangent) —
+    ``a``, ``b`` and the saved residuals are still whole-array jit
+    operands, and the trace unrolls ``ceil(N / n_tile) *
+    ceil(NW / window_chunk)`` chunk bodies.  For matrices that genuinely
+    exceed device memory use :func:`plan` with ``device_bytes=``
+    (host-side payload staging, one compiled window-step executable);
+    this entry point is for *training* with windowed-execution semantics
+    and for pinning the streaming tier's bit-identity.
 
     Unbatched ``Format.HFLEX`` only; ``backend`` must provide streaming
     hooks (all built-in HFLEX backends do).
@@ -250,6 +289,10 @@ def spmm_streaming(
     if not 1 <= wchunk <= a.data.nw:
         raise ValueError(
             f"window_chunk must be in [1, NW={a.data.nw}], got {wchunk}")
+    ntile = b.shape[1] if n_tile is None else int(n_tile)
+    if not 1 <= ntile <= b.shape[1]:
+        raise ValueError(
+            f"n_tile must be in [1, N={b.shape[1]}], got {ntile}")
     cshape = (m, b.shape[1])
     c_ = jnp.zeros(cshape, b.dtype) if c is None else jnp.asarray(c)
     if c_.shape != cshape:
@@ -258,7 +301,7 @@ def spmm_streaming(
     if _bk.get_backend(name).stream is None:
         raise ValueError(f"backend {name!r} has no streaming hooks")
     okey = tuple(sorted(opts.items()))
-    return _stream_jit(name, okey, wchunk, a, b, c_,
+    return _stream_jit(name, okey, wchunk, ntile, a, b, c_,
                        jnp.asarray(alpha, jnp.float32),
                        jnp.asarray(beta, jnp.float32))
 

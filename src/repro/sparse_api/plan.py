@@ -44,14 +44,21 @@ batched serving path run through one plan abstraction.
 **Streaming plans** (:class:`StreamingPlan`, selected by
 ``plan(..., device_bytes=)`` or forced with ``stream=True``) are the
 out-of-core tier: a matrix whose slab payload exceeds the device budget is
-held host-side and executed as a pipeline of K0-*window-chunk* dispatches
-— ONE window-step executable of bucketed shape ``(MB, WCHUNK, LW)``
-accumulates ``A_w @ B_w`` into a persistent (donated) f32 C-accumulator
-while the next chunk's host→device transfer is staged, and the
-``alpha``/``beta`` epilogue is applied once at the end.  Results are
-bit-identical to the resident path (see ``backends.StreamOps``).  This is
-the paper's BRAM K-window lifted to the host→device boundary: device
-memory bounds the *chunk*, not the matrix.
+held host-side and executed over a 2-D **(K-window × N-tile)** grid — ONE
+window-step executable of bucketed shape ``(MB, WCHUNK, LW)`` × dense
+width ``NTILE`` accumulates ``A_w @ B_{w,t}`` into a persistent (donated)
+f32 C-stripe accumulator while the next chunk's host→device transfer is
+staged, and the ``alpha``/``beta`` epilogue is applied once per tile at
+the end of its window walk.  When the full-N working set fits the budget
+the N dimension stays untiled (``n_tiles == 1``, exactly the PR-4
+pipeline); when even one full-N chunk would blow the budget, N splits into
+column tiles so the budget bounds ``(WCHUNK·K0, NTILE)`` slices of ``b``
+plus an ``(M, NTILE)`` C stripe.  Results are bit-identical to the
+resident path either way (see ``backends.StreamOps``: per-column math is
+independent, and each column's add sequence is untouched by tiling).
+This is the paper's BRAM K-window and URAM C-partition lifted together to
+the host→device boundary: device memory bounds the *tile*, not the
+matrix.
 
 Plans are a forward/serving construct: ``run`` calls an AOT-compiled
 executable and is not differentiable — training goes through ``spmm`` (or
@@ -208,7 +215,7 @@ class SpmmPlan:
         self.m, self.k = a.shape
         self.group = a.batch
         self.mesh = mesh
-        self.backend = _bk.resolve_backend(backend, a)
+        self.backend = _bk.resolve_backend(backend, a, n=self.n)
         self.opts = dict(opts)
         self.dtype = jnp.dtype(dtype)
         okey = tuple(sorted(self.opts.items()))
@@ -396,24 +403,39 @@ class StreamingPlan:
     accumulator — for matrices whose slab payload exceeds device memory.
 
     Built via ``plan(..., device_bytes=)`` / ``plan(..., stream=True)``.
-    The full HFLEX payload is staged **host-side**; each of the
-    ``steps = ceil(NW / window_chunk)`` dispatches receives only a
-    ``(MB, WCHUNK, LW)`` slab chunk plus the matching ``(WCHUNK*K0, N)``
-    rows of ``b``, accumulated into a donated f32 C block by ONE
-    AOT-compiled window-step executable (the chunk after the one in flight
-    is staged while the device computes — JAX async dispatch gives the
-    transfer/compute overlap as long as ``run`` never blocks).  ``beta*c``
-    is folded in exactly once by the final epilogue dispatch, so results
-    are bit-identical to the resident :class:`SpmmPlan` / unplanned
-    ``spmm`` (see ``backends.StreamOps`` for why the raw-accumulator
-    decomposition is the only bit-exact one).
+    The full HFLEX payload is staged **host-side** and executed over a 2-D
+    (K-window × N-tile) grid, column tiles outer, window chunks inner:
+    each of the ``steps = ceil(NW / window_chunk)`` dispatches of a tile
+    receives only a ``(MB, WCHUNK, LW)`` slab chunk plus the matching
+    ``(WCHUNK*K0, NTILE)`` block of ``b``, accumulated into a donated f32
+    C-stripe by ONE AOT-compiled window-step executable shared by every
+    tile (the chunk after the one in flight is staged while the device
+    computes — across tile boundaries too — so JAX async dispatch gives
+    the transfer/compute overlap as long as ``run`` never blocks).
+    ``beta*c`` is folded in exactly once per tile by its epilogue
+    dispatch, so results are bit-identical to the resident
+    :class:`SpmmPlan` / unplanned ``spmm`` (see ``backends.StreamOps`` for
+    why the raw-accumulator decomposition is the only bit-exact one; the
+    tail tile is column-padded inertly, like tail windows are padded with
+    inert slabs).
+
+    The budget sizes both dimensions: the largest ``n_tile`` (N, then
+    descending powers of two) whose working set
+    ``2·WCHUNK·per_window(NTILE) + acc(NTILE) + 2·M·NTILE·itemsize``
+    admits at least one window per dispatch wins, so N stays untiled
+    (``n_tiles == 1`` — device-array results, exactly the PR-4 pipeline)
+    whenever it can.  With ``n_tiles > 1`` the assembled ``(M, N)`` result
+    is a **host (numpy) array** — the full C may not fit on device; only
+    one stripe plus one pending writeback is ever device-resident.
 
     Attributes of note: ``window_chunk`` (K0 windows per dispatch, bucketed
     to a power of two so bucket-mates share the step executable),
-    ``steps`` / ``window_dispatches`` (chunk dispatches per run),
-    ``payload_bytes`` (full host payload), ``chunk_payload_bytes`` and
-    ``peak_payload_bytes`` (device working set: two staged chunks + the
-    accumulator + epilogue operands).
+    ``n_tile`` / ``n_tiles`` (column-tile width and count),
+    ``steps`` (window dispatches per tile), ``window_dispatches``
+    (``steps * n_tiles`` per run), ``payload_bytes`` (full host payload),
+    ``chunk_payload_bytes`` and ``peak_payload_bytes`` (device working
+    set: two staged chunks + the accumulator + epilogue operands, at
+    ``n_tile`` width).
     """
 
     group = None
@@ -422,7 +444,8 @@ class StreamingPlan:
     def __init__(self, a: SparseTensor, n: int, backend: str,
                  opts: Dict[str, Any], dtype=jnp.float32,
                  device_bytes: Optional[int] = None,
-                 window_chunk: Optional[int] = None):
+                 window_chunk: Optional[int] = None,
+                 n_tile: Optional[int] = None):
         if not isinstance(a, SparseTensor):
             raise TypeError(
                 f"plan expects a SparseTensor, got {type(a).__name__}")
@@ -440,7 +463,7 @@ class StreamingPlan:
         self.a = a
         self.n = int(n)
         self.m, self.k = a.shape
-        self.backend = _bk.resolve_backend(backend, a)
+        self.backend = _bk.resolve_backend(backend, a, n=self.n)
         stream = _bk.get_backend(self.backend).stream
         if stream is None:
             raise ValueError(
@@ -473,45 +496,56 @@ class StreamingPlan:
                                   nse=a.nse)
         self._d = d
 
-        acc_shape = tuple(jax.eval_shape(
-            lambda: stream.init(a, self.n, **self.opts)).shape)
-        self._acc_shape = acc_shape
-        acc_bytes = int(np.prod(acc_shape)) * 4
-        out_bytes = 2 * self.m * self.n * self.dtype.itemsize  # c + out
         if window_chunk is not None:
-            wc = int(window_chunk)
-            if not 1 <= wc <= d.nw:
+            window_chunk = int(window_chunk)
+            if not 1 <= window_chunk <= d.nw:
                 raise ValueError(
-                    f"window_chunk must be in [1, NW={d.nw}], got {wc}")
-        else:
-            wc = self._choose_window_chunk(device_bytes, acc_bytes,
-                                           out_bytes)
+                    f"window_chunk must be in [1, NW={d.nw}], got "
+                    f"{window_chunk}")
+        if n_tile is not None:
+            n_tile = int(n_tile)
+            if not 1 <= n_tile <= self.n:
+                raise ValueError(
+                    f"n_tile must be in [1, N={self.n}], got {n_tile}")
+        ntile, wc = self._choose_tiling(device_bytes, n_tile, window_chunk)
+        self.n_tile = ntile
+        self.n_tiles = cdiv(self.n, ntile)
         self.window_chunk = wc
         self.steps = cdiv(d.nw, wc)
+        acc_shape = self._acc_shape_for(ntile)
+        self._acc_shape = acc_shape
+        acc_bytes = int(np.prod(acc_shape)) * 4
+        out_bytes = 2 * self.m * ntile * self.dtype.itemsize  # c + out stripe
         self.chunk_payload_bytes = wc * _per_window_bytes(
-            d, self.n, self.dtype.itemsize)
+            d, ntile, self.dtype.itemsize)
         # double-buffered: chunk i computing + chunk i+1 staged
         self.peak_payload_bytes = (2 * self.chunk_payload_bytes
                                    + acc_bytes + out_bytes)
         if (device_bytes is not None
                 and self.peak_payload_bytes > device_bytes):
-            # window_chunk=1 is the floor: the accumulator + epilogue
-            # operands + one double-buffered window are irreducible.  On a
-            # real device this overrun is the OOM the budget was meant to
-            # prevent — surface it instead of failing silently later.
+            # No (window_chunk, n_tile) point on the 2-D grid fits: the
+            # accumulator + epilogue stripe + one double-buffered window
+            # are irreducible even at the finest tiling, so the plan keeps
+            # the requested width rather than paying tiling overhead for a
+            # budget it cannot meet anyway.  On a real device this overrun
+            # is the OOM the budget was meant to prevent — surface it
+            # instead of failing silently later.
             warnings.warn(
                 f"streaming working set ({self.peak_payload_bytes} B: "
                 f"2x{self.chunk_payload_bytes} B chunks + {acc_bytes} B "
                 f"accumulator + {out_bytes} B epilogue operands) exceeds "
                 f"device_bytes={device_bytes}; window_chunk="
                 f"{self.window_chunk} is already the floor for this "
-                f"(M, N) — raise the budget or shrink N",
+                f"(M, N) even with N-tiling — raise the budget or shrink "
+                f"M",
                 stacklevel=3)
 
         # ONE window-step executable: bucketed (MB, WCHUNK, LW) chunk shape
         # shared by every bucket-mate (the HFlex property, kept under
-        # streaming).  k of the chunk is the constant WCHUNK*K0; the
-        # parent's ragged K only affects host-side slicing.
+        # streaming) AND by every column tile — the step is tile-position-
+        # independent (the tail tile arrives column-padded), so the 2-D
+        # grid needs no extra executables.  k of the chunk is the constant
+        # WCHUNK*K0; the parent's ragged K only affects host-side slicing.
         m, k0 = self.m, d.k0
         kc = wc * k0
         interleaved, tm, chunk_sz = d.interleaved, d.tm, d.chunk
@@ -529,11 +563,13 @@ class StreamingPlan:
         out_dtype = self.dtype
 
         def traced_finish(acc, c, alpha, beta):
-            raw = stream.collect(a_struct, acc, self.n, **opts_d)
+            raw = stream.collect(a_struct, acc, ntile, **opts_d)
             return _bk.stream_finish(raw, c, alpha, beta, out_dtype)
 
         geom = (d.mb, wc, d.lw, tm, k0, chunk_sz, interleaved)
-        self.exec_key = ("stream-step", self.backend, okey, geom, m, self.n,
+        # the N slot is the *tile* width: plans that tile a huge N down to
+        # the same stripe share executables with plans of that natural N
+        self.exec_key = ("stream-step", self.backend, okey, geom, m, ntile,
                          str(self.dtype))
         sd = jax.ShapeDtypeStruct
         chunk_shapes = (
@@ -541,17 +577,17 @@ class StreamingPlan:
             sd((d.mb, wc, d.lw), jnp.int32),        # cols
             sd((d.mb, wc, d.lw), jnp.int32),        # rows
             sd((d.mb, wc), jnp.int32),              # q
-            sd((kc, self.n), self.dtype),           # b chunk
+            sd((kc, ntile), self.dtype),            # b tile chunk
             sd(acc_shape, jnp.float32),             # carried accumulator
         )
-        # The accumulator is donated: the persistent C block is updated in
+        # The accumulator is donated: the persistent C stripe is updated in
         # place across window dispatches (on backends that honor donation).
         self._step_exec = _aot_compile(self.exec_key, traced_step,
                                        chunk_shapes, donate_argnums=(5,))
-        fin_key = ("stream-finish", self.backend, okey, geom, m, self.n,
+        fin_key = ("stream-finish", self.backend, okey, geom, m, ntile,
                    str(self.dtype))
         fin_shapes = (sd(acc_shape, jnp.float32),
-                      sd((m, self.n), self.dtype),
+                      sd((m, ntile), self.dtype),
                       sd((), jnp.float32), sd((), jnp.float32))
         self._finish_exec = _aot_compile(fin_key, traced_finish, fin_shapes)
         self._zero_c: Optional[jax.Array] = None
@@ -559,18 +595,60 @@ class StreamingPlan:
 
     # -- sizing --------------------------------------------------------------
 
-    def _choose_window_chunk(self, device_bytes, acc_bytes, out_bytes) -> int:
-        """Largest power-of-two window count whose double-buffered working
-        set fits the budget (>= 1 — below that the problem cannot run at
-        all); no budget means the finest (MB, 1, LW) granularity."""
+    def _acc_shape_for(self, width: int) -> Tuple[int, ...]:
+        """Accumulator shape the backend's stream.init materializes for a
+        dense width (backends may pad it up, e.g. the Pallas kernel layout
+        rounds columns to TN) — sizing must charge the real allocation."""
+        stream, a, opts = self._stream, self.a, self.opts
+        return tuple(jax.eval_shape(
+            lambda: stream.init(a, width, **opts)).shape)
+
+    def _choose_tiling(self, device_bytes, n_tile, window_chunk):
+        """Pick the (n_tile, window_chunk) execution grid for the budget.
+
+        Largest tile first: the full N, then descending powers of two —
+        the first width whose double-buffered working set
+        ``2*WCHUNK*per_window(NTILE) + acc(NTILE) + 2*M*NTILE*itemsize``
+        admits at least one window per dispatch wins, and its window chunk
+        is the largest power of two that fits (>= 1).  So N stays untiled
+        whenever it can (n_tiles == 1 is exactly the 1-D PR-4 pipeline)
+        and tiles only when one full-N chunk alone would blow the budget.
+        Explicit ``n_tile``/``window_chunk`` pin their dimension; no
+        budget means the finest (MB, 1, LW) granularity at full width.
+        If nothing fits, fall back to the requested width at the minimum
+        chunk (the caller warns about the overrun).
+        """
         d = self._d
+        itemsize = self.dtype.itemsize
         if device_bytes is None:
-            return 1
-        per_w = _per_window_bytes(d, self.n, self.dtype.itemsize)
-        avail = max(int(device_bytes) - acc_bytes - out_bytes, 0) // 2
-        wc = max(1, avail // per_w)
-        wc = 1 << (int(wc).bit_length() - 1)          # pow2 bucket
-        return min(wc, d.nw)
+            return (n_tile or self.n), (window_chunk or 1)
+        budget = int(device_bytes)
+        if n_tile is not None:
+            candidates = [n_tile]
+        else:
+            candidates = [self.n]
+            t = 1
+            while t < self.n:
+                t <<= 1
+            t >>= 1                                  # largest pow2 < N
+            while t >= 1:
+                candidates.append(t)
+                t >>= 1
+        for ntile in candidates:
+            acc_bytes = int(np.prod(self._acc_shape_for(ntile))) * 4
+            out_bytes = 2 * self.m * ntile * itemsize
+            per_w = _per_window_bytes(d, ntile, itemsize)
+            if window_chunk is not None:
+                if (2 * window_chunk * per_w + acc_bytes + out_bytes
+                        <= budget):
+                    return ntile, window_chunk
+                continue
+            avail = max(budget - acc_bytes - out_bytes, 0) // 2
+            wc = avail // per_w
+            if wc >= 1:
+                wc = 1 << (int(wc).bit_length() - 1)  # pow2 bucket
+                return ntile, min(wc, d.nw)
+        return (n_tile or self.n), (window_chunk or 1)
 
     @property
     def payload_bytes(self) -> int:
@@ -580,13 +658,16 @@ class StreamingPlan:
 
     @property
     def window_dispatches(self) -> int:
-        """Window-chunk dispatches per run (excludes the epilogue)."""
-        return self.steps
+        """Window-chunk dispatches per run — ``steps`` per column tile —
+        (excludes the per-tile epilogues)."""
+        return self.steps * self.n_tiles
 
     # -- execution -----------------------------------------------------------
 
-    def _stage_chunk(self, i: int, b_h: np.ndarray, vals_h: np.ndarray):
-        """Slice + pad chunk ``i`` on the host and start its transfer."""
+    def _stage_chunk(self, i: int, b_h: np.ndarray, vals_h: np.ndarray,
+                     n0: int = 0):
+        """Slice + pad chunk ``i`` of column tile ``[n0, n0+n_tile)`` on
+        the host and start its transfer."""
         d = self._d
         wc, k0, nw = self.window_chunk, d.k0, d.nw
         w0 = i * wc
@@ -610,20 +691,48 @@ class StreamingPlan:
             q_c = np.pad(q_c, ((0, 0), (0, pad)))
         kb0 = w0 * k0
         kb1 = min(self.k, kb0 + wc * k0)
-        b_c = b_h[kb0:kb1]
-        if b_c.shape[0] < wc * k0:
-            b_c = np.pad(b_c, ((0, wc * k0 - b_c.shape[0]), (0, 0)))
+        n1 = min(self.n, n0 + self.n_tile)
+        b_c = b_h[kb0:kb1, n0:n1]
+        rpad = wc * k0 - b_c.shape[0]
+        # Tail tile: pad with inert zero columns — per-column math is
+        # independent, so real columns are bit-untouched and the padded
+        # ones are sliced off at writeback.
+        cpad = self.n_tile - (n1 - n0)
+        if rpad or cpad:
+            b_c = np.pad(b_c, ((0, rpad), (0, cpad)))
         return tuple(jax.device_put(x)
                      for x in (vals_c, cols_c, rows_c, q_c, b_c))
 
-    def run(self, b, c=None, alpha=1.0, beta=0.0, *, values=None) -> jax.Array:
-        """Stream the SpMM: ``steps`` window dispatches + one epilogue.
+    def _c_tile(self, c_h: Optional[np.ndarray], j: int):
+        """Device (M, n_tile) slice of the epilogue operand for tile ``j``
+        (cached zeros when there is no ``c``; tail tile column-padded)."""
+        if c_h is None:
+            if self._zero_c is None:
+                self._zero_c = jnp.zeros((self.m, self.n_tile), self.dtype)
+            return self._zero_c
+        n0 = j * self.n_tile
+        n1 = min(self.n, n0 + self.n_tile)
+        ct = c_h[:, n0:n1]
+        if n1 - n0 < self.n_tile:
+            ct = np.pad(ct, ((0, 0), (0, self.n_tile - (n1 - n0))))
+        return jax.device_put(ct)
+
+    def run(self, b, c=None, alpha=1.0, beta=0.0, *, values=None):
+        """Stream the SpMM over the (N-tile × K-chunk) grid: per tile,
+        ``steps`` window dispatches + one epilogue.
 
         ``b`` is ``(K, N)`` of the planned dtype — a host (numpy) array by
-        preference: only chunk-sized slices are transferred.  ``values``
-        substitutes a new non-zero payload of the packed structure (sliced
-        host-side per chunk).  The loop never blocks on device results, so
-        chunk i+1's transfer overlaps chunk i's compute.
+        preference: only tile-chunk-sized slices are transferred.
+        ``values`` substitutes a new non-zero payload of the packed
+        structure (sliced host-side per chunk, chunk-ahead like ``b`` —
+        streamed pruned-weight serving double-buffers too).  The loop
+        never blocks on device results, so chunk i+1's transfer overlaps
+        chunk i's compute, across tile boundaries included.
+
+        With ``n_tiles == 1`` the result is a device array (the PR-4
+        path); with ``n_tiles > 1`` the stripes are assembled into a host
+        (numpy) ``(M, N)`` array — the full C is exactly what the budget
+        said does not fit on device.
         """
         b_h = np.asarray(b)
         if b_h.shape != (self.k, self.n) or b_h.dtype != self.dtype:
@@ -637,36 +746,77 @@ class StreamingPlan:
                 raise ValueError(
                     f"values must have the packed shape "
                     f"{self._vals_h.shape}, got {vals_h.shape}")
-        if c is None:
-            if self._zero_c is None:
-                self._zero_c = jnp.zeros((self.m, self.n), self.dtype)
-            c = self._zero_c
-        else:
-            # cast to the planned dtype (the AOT executable's signature) —
-            # the same treatment the batched scheduler gives mismatched c
-            c = jnp.asarray(c, self.dtype)
-            if c.shape != (self.m, self.n):
-                raise ValueError(f"c must have shape {(self.m, self.n)}, "
-                                 f"got {c.shape}")
-        alpha, beta = _ab_operands(self._ab_cache, alpha, beta)
-        acc = jnp.zeros(self._acc_shape, jnp.float32)
-        nxt = self._stage_chunk(0, b_h, vals_h)
-        for i in range(self.steps):
-            ops = nxt
-            acc = self._step_exec(*ops, acc)       # async dispatch
-            if i + 1 < self.steps:                 # stage while it computes
-                nxt = self._stage_chunk(i + 1, b_h, vals_h)
-        PLAN_STATS["dispatches"] += self.steps + 1
-        PLAN_STATS["window_dispatches"] += self.steps
-        return self._finish_exec(acc, c, alpha, beta)
+        if self.n_tiles == 1:
+            if c is None:
+                c = self._c_tile(None, 0)
+            else:
+                # cast to the planned dtype (the AOT executable's
+                # signature) — the same treatment the batched scheduler
+                # gives mismatched c
+                c = jnp.asarray(c, self.dtype)
+                if c.shape != (self.m, self.n):
+                    raise ValueError(
+                        f"c must have shape {(self.m, self.n)}, "
+                        f"got {c.shape}")
+            alpha, beta = _ab_operands(self._ab_cache, alpha, beta)
+            acc = jnp.zeros(self._acc_shape, jnp.float32)
+            nxt = self._stage_chunk(0, b_h, vals_h)
+            for i in range(self.steps):
+                ops = nxt
+                acc = self._step_exec(*ops, acc)   # async dispatch
+                if i + 1 < self.steps:             # stage while it computes
+                    nxt = self._stage_chunk(i + 1, b_h, vals_h)
+            PLAN_STATS["dispatches"] += self.steps + 1
+            PLAN_STATS["window_dispatches"] += self.steps
+            return self._finish_exec(acc, c, alpha, beta)
 
-    def __call__(self, b, c=None, alpha=1.0, beta=0.0, **kw) -> jax.Array:
+        c_h = None
+        if c is not None:
+            c_h = np.asarray(c, self.dtype)
+            if c_h.shape != (self.m, self.n):
+                raise ValueError(f"c must have shape {(self.m, self.n)}, "
+                                 f"got {c_h.shape}")
+        alpha, beta = _ab_operands(self._ab_cache, alpha, beta)
+        out = np.empty((self.m, self.n), self.dtype)
+        pending = None          # one finished stripe awaiting writeback
+        nxt = self._stage_chunk(0, b_h, vals_h, 0)
+        for j in range(self.n_tiles):
+            n0 = j * self.n_tile
+            n1 = min(self.n, n0 + self.n_tile)
+            # fresh accumulator per tile: the step executable donates its
+            # acc argument, so each tile must start from its own buffer
+            acc = jnp.zeros(self._acc_shape, jnp.float32)
+            for i in range(self.steps):
+                ops = nxt
+                acc = self._step_exec(*ops, acc)   # async dispatch
+                if i + 1 < self.steps:             # stage while it computes
+                    nxt = self._stage_chunk(i + 1, b_h, vals_h, n0)
+                elif j + 1 < self.n_tiles:         # ...across tiles too
+                    nxt = self._stage_chunk(0, b_h, vals_h,
+                                            (j + 1) * self.n_tile)
+            stripe = self._finish_exec(acc, self._c_tile(c_h, j),
+                                       alpha, beta)
+            # Deferred-by-one writeback: materialize tile j-1's stripe
+            # while tile j's dispatches queue — at most two stripes are
+            # ever device-resident and the pipeline never drains.
+            if pending is not None:
+                s, p0, p1 = pending
+                out[:, p0:p1] = np.asarray(s)[:, :p1 - p0]
+            pending = (stripe, n0, n1)
+        s, p0, p1 = pending
+        out[:, p0:p1] = np.asarray(s)[:, :p1 - p0]
+        PLAN_STATS["dispatches"] += self.n_tiles * (self.steps + 1)
+        PLAN_STATS["window_dispatches"] += self.steps * self.n_tiles
+        return out
+
+    def __call__(self, b, c=None, alpha=1.0, beta=0.0, **kw):
         return self.run(b, c, alpha, beta, **kw)
 
     def __repr__(self) -> str:
         return (f"StreamingPlan(shape=({self.m}, {self.k})@{self.n}, "
                 f"backend={self.backend!r}, window_chunk="
-                f"{self.window_chunk}, steps={self.steps})")
+                f"{self.window_chunk}, steps={self.steps}, "
+                f"n_tile={self.n_tile}, n_tiles={self.n_tiles})")
 
 
 def plan(
@@ -679,6 +829,7 @@ def plan(
     device_bytes: Union[int, str, None] = None,
     stream: Optional[bool] = None,
     window_chunk: Optional[int] = None,
+    n_tile: Optional[int] = None,
     **opts,
 ) -> Union[SpmmPlan, "StreamingPlan"]:
     """Prepare ``alpha * A @ b + beta * c`` for dense operands of width ``n``.
@@ -696,13 +847,15 @@ def plan(
     ``device_bytes`` (an int budget, or ``"auto"`` to read the backend's
     reported memory limit) selects the out-of-core tier: when the resident
     working set — packed payload + ``b`` + ``c`` + output — exceeds the
-    budget, a :class:`StreamingPlan` is returned, which streams K0-window
-    chunks through a persistent C accumulator instead of pinning the slabs
-    on device.  ``stream=True``/``False`` forces the choice;
-    ``window_chunk`` pins the windows-per-dispatch (otherwise sized from
-    the budget).  Streaming requires an unbatched HFLEX matrix without a
-    mesh — oversized batched/mesh plans raise rather than silently pinning
-    more memory than the device has.
+    budget, a :class:`StreamingPlan` is returned, which streams a 2-D
+    (K-window × N-tile) grid through a persistent C-stripe accumulator
+    instead of pinning the slabs on device.  ``stream=True``/``False``
+    forces the choice; ``window_chunk`` pins the windows-per-dispatch and
+    ``n_tile`` the column-tile width (either otherwise sized from the
+    budget — N stays untiled unless one full-N chunk alone would blow
+    it).  Streaming requires an unbatched HFLEX matrix without a mesh —
+    oversized batched/mesh plans raise rather than silently pinning more
+    memory than the device has.
     """
     budget: Optional[int] = None
     if device_bytes is not None:
@@ -722,7 +875,11 @@ def plan(
                 "chips first, then stream each shard (device_bytes applies "
                 "per chip)")
         return StreamingPlan(a, n, backend, opts, dtype=dtype,
-                             device_bytes=budget, window_chunk=window_chunk)
+                             device_bytes=budget, window_chunk=window_chunk,
+                             n_tile=n_tile)
+    if n_tile is not None:
+        raise ValueError("n_tile applies to streaming plans only (pass "
+                         "stream=True or a device_bytes budget)")
     return SpmmPlan(a, n, backend, opts, dtype=dtype, mesh=mesh)
 
 

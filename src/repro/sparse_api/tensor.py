@@ -362,7 +362,11 @@ class SparseTensor:
         is a view over the window axis, and
         ``A.windows(w0, w1) @ b[w0*K0 : w1*K0]`` is exactly those windows'
         contribution to ``A @ b``.  This is the paper's BRAM K-window lifted
-        to the host→device boundary: the unit an out-of-core plan streams.
+        to the host→device boundary: the K dimension of the out-of-core
+        plan's 2-D (K-window × N-tile) grid.  The N dimension needs no
+        sparse-side slicing at all — per-column math is independent, so a
+        ``StreamingPlan`` pairs these window slices with ``b[:, lo:hi]``
+        column stripes and the results concatenate bit-exactly.
 
         Slices of a stacked (batched) tensor keep the group axis and the
         per-member ``nse``, so they remain ``unstack``-compatible.  Works on

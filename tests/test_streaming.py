@@ -442,8 +442,12 @@ class TestSchedulerStreamingLane:
         assert st["streamed"] == 1
         assert st["window_dispatches"] > 1
         assert st["batched_requests"] == 6      # mates still group
-        # consistent accounting: group dispatches + streamed steps+epilogue
-        assert st["dispatches"] == st["groups"] + st["window_dispatches"] + 1
+        # consistent accounting: group dispatches + streamed window steps
+        # + one epilogue per column tile of the streamed plan
+        pl = sched.engine.last_streaming_plan
+        assert st["dispatches"] == (st["groups"] + st["window_dispatches"]
+                                    + pl.n_tiles)
+        assert st["n_tiles"] == pl.n_tiles >= 1
         lf = st["last_flush"]
         assert lf["requests"] == len(reqs)
         assert lf["dispatches"] == st["dispatches"]
