@@ -17,6 +17,10 @@ trajectory can accumulate across PRs):
                async-pipelined (futures + pack/execute overlap) serving
                on a mixed pool of bucket-mates (bit-identity asserted;
                requests/s, dispatches/request, pack_hidden_fraction)
+  bsr_serve_* — pruned-model serving lane: pools of same-geometry BSR
+               weights (DLMC patterns, llama/qwen FFN geometries) served
+               grouped (one batched dispatch per bucket) vs per-request
+               (bit-identity asserted; requests/s, dispatches/request)
   stream_*   — out-of-core 2-D (K-window x N-tile) streaming vs the
                resident plan at several device_bytes caps, including a
                huge-N case whose budget forces column tiling
@@ -467,6 +471,111 @@ def bench_spmv() -> None:
                 "dispatches_per_request": stats["dispatches_per_request"]})
 
 
+def bench_bsr_serve() -> None:
+    """Pruned-model serving lane: pools of same-geometry BSR weights
+    (DLMC-style patterns on llama/qwen FFN geometries, budget-scaled with
+    the aspect ratio preserved) served grouped vs per-request.  A pool of
+    G same-sparsity members shares one bucketed group key, so the grouped
+    path flushes as ONE batched dispatch (dispatches/request = 1/G); the
+    mixed-sparsity DLMC grid row shows bucketing still amortizing across
+    kept-block buckets.  Grouped results are bit-identical to the
+    sequential path (asserted before timing)."""
+    from repro.configs import get_config
+    from repro.core.engine import SextansEngine
+    from repro.data.matrices import (
+        banded_pruned, block_random_pruned, dlmc_suite, magnitude_pruned)
+    from repro.launch.serve import SpmmRequest, serve_spmm_requests
+    from repro.sparse_api import Format, from_dense
+
+    BLK = 16
+    rng = np.random.default_rng(0)
+
+    def scaled_ffn(arch: str, target: int = 128):
+        cfg = get_config(arch)
+        d = max(BLK, (target // BLK) * BLK)
+        ff = max(BLK, int(round(cfg.d_ff / cfg.d_model * d / BLK)) * BLK)
+        return d, ff
+
+    def engine():
+        return SextansEngine(tm=128, k0=128, chunk=8, impl="jnp")
+
+    patterns = (magnitude_pruned, banded_pruned, block_random_pruned)
+    for arch in ("llama3.2-1b", "qwen1.5-32b"):
+        d, ff = scaled_ffn(arch)
+        n = 32
+        # G=16 pruned up-projections at one sparsity level: the exact
+        # kept-block count is sparsity-determined, so all 16 share a
+        # bucket and the grouped path is a single dispatch
+        reqs = []
+        for i in range(16):
+            w = patterns[i % 3](d, ff, 0.90, block=(BLK, BLK), seed=i)
+            a = from_dense(w.T, format=Format.BSR, block=(BLK, BLK))
+            reqs.append(SpmmRequest(
+                a=a, b=rng.standard_normal((d, n)).astype(np.float32)))
+
+        outs_g, _ = serve_spmm_requests(reqs, engine(), batched=True)
+        outs_s, _ = serve_spmm_requests(reqs, engine(), batched=False)
+        bitexact = all(np.array_equal(x, y) for x, y in zip(outs_g, outs_s))
+        assert bitexact, f"grouped BSR serving diverged ({arch})"
+
+        for mode, kw in (("grouped", dict(batched=True)),
+                         ("sequential", dict(batched=False))):
+            best = None
+            for _ in range(3):
+                t0 = time.perf_counter()
+                _, stats = serve_spmm_requests(reqs, engine(), **kw)
+                dt = time.perf_counter() - t0
+                if best is None or dt < best[0]:
+                    best = (dt, stats)
+            dt, stats = best
+            us = dt * 1e6 / len(reqs)
+            rps = len(reqs) / dt
+            dpr = stats["dispatches_per_request"]
+            tag = arch.split("-")[0].replace(".", "_")
+            _row(f"bsr_serve_{mode}_{tag}", us,
+                 f"{rps:.0f}req/s_{dpr:.3f}disp/req_"
+                 f"bf{stats['batched_fraction']:.2f}"
+                 + ("_bitexact_vs_sequential" if mode == "grouped" else ""),
+                 extra={
+                     "arch": arch,
+                     "ffn_geometry": [d, ff],
+                     "requests": len(reqs),
+                     "requests_per_s": rps,
+                     "dispatches_per_request": dpr,
+                     "batched_fraction": stats["batched_fraction"],
+                     "groups": stats["groups"],
+                     "bit_identical": bitexact,
+                 })
+
+    # the full DLMC grid (3 patterns x 5 sparsities) on one geometry:
+    # ragged kept-block counts spread over power-of-two buckets, grouped
+    # dispatch count = number of occupied buckets, not requests
+    d, ff = scaled_ffn("llama3.2-1b")
+    reqs = []
+    for e in dlmc_suite(d, ff, block=(BLK, BLK)):
+        a = from_dense(e.weight.T, format=Format.BSR, block=(BLK, BLK))
+        reqs.append(SpmmRequest(
+            a=a, b=rng.standard_normal((d, 32)).astype(np.float32)))
+    outs_g, _ = serve_spmm_requests(reqs, engine(), batched=True)
+    outs_s, _ = serve_spmm_requests(reqs, engine(), batched=False)
+    bitexact = all(np.array_equal(x, y) for x, y in zip(outs_g, outs_s))
+    assert bitexact, "DLMC-grid grouped serving diverged"
+    t0 = time.perf_counter()
+    _, stats = serve_spmm_requests(reqs, engine(), batched=True)
+    dt = time.perf_counter() - t0
+    dpr = stats["dispatches_per_request"]
+    _row("bsr_serve_dlmc_grid", dt * 1e6 / len(reqs),
+         f"{len(reqs)}req_{stats['groups']}buckets_{dpr:.3f}disp/req_bitexact",
+         extra={
+             "requests": len(reqs),
+             "requests_per_s": len(reqs) / dt,
+             "dispatches_per_request": dpr,
+             "batched_fraction": stats["batched_fraction"],
+             "groups": stats["groups"],
+             "bit_identical": bitexact,
+         })
+
+
 def bench_validate() -> None:
     """Run the ``repro.analysis`` invariant validator over every packed
     artifact family the benchmarks dispatch (kernel/plan slabs, streaming
@@ -541,6 +650,7 @@ def main() -> None:
         ("plan", bench_plan),
         ("scheduler", bench_scheduler),
         ("serve", bench_serve),
+        ("bsr_serve", bench_bsr_serve),
         ("stream", bench_stream),
         ("spmv", bench_spmv),
     ]

@@ -1,0 +1,113 @@
+"""Pruned-model serving: expert/layer groups as ONE batched dispatch.
+
+A pruned transformer is a pool of small same-geometry BSR weights — E
+experts' FFN matrices, or L layers' q-projections.  Dispatching them one
+kernel launch at a time leaves the accelerator idle between launches; the
+grouped BSR lane stacks the pool behind a leading group axis
+(``stack_bsr``) and executes it as a single batched call, bit-identically
+to the per-request path.  Three tiers are demonstrated:
+
+1. ``SparseLinearGroup`` — L pruned layers applied in one grouped
+   dispatch (differentiable ``spmm`` path and the AOT ``plan_group``
+   serving path);
+2. ``SparseMoE`` — a capacity-routed MoE whose E experts' wi/wg/wo are
+   block-pruned and executed as 3 grouped dispatches per layer instead of
+   3·E;
+3. the ``SpmmScheduler`` pool — pre-packed BSR skeletons submitted as
+   ordinary serving requests group with their bucket-mates and flush as
+   one dispatch (``dispatches_per_request`` = 1/G), including DLMC-style
+   magnitude/banded/block-random pruning patterns.
+
+Run:  PYTHONPATH=src python examples/pruned_moe_serve.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SextansEngine
+from repro.data.matrices import DLMC_SPARSITIES, magnitude_pruned
+from repro.launch.serve import SpmmRequest, serve_spmm_requests
+from repro.models.common import Initializer, ModelConfig
+from repro.models.layers import SparseLinear, SparseLinearGroup, SparseMoE
+from repro.sparse_api import Format, from_dense
+
+
+def best_of(fn, iters=5):
+    fn()
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main():
+    # -- 1. a layer group: 8 pruned projections, one dispatch ---------------
+    d_in, d_out, g = 128, 256, 8
+    layers, params = zip(*[
+        SparseLinear.create(Initializer(10 + i, jnp.float32),
+                            d_in, d_out, block=(16, 16), density=0.25)
+        for i in range(g)])
+    grp = SparseLinearGroup(layers)
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, d_in), jnp.float32)
+
+    y_grp = grp(list(params), x, use_plan=True)
+    y_seq = jnp.stack([l(p, x) for l, p in zip(layers, params)])
+    assert np.array_equal(np.asarray(y_grp), np.asarray(y_seq))
+    t_grp = best_of(lambda: jax.block_until_ready(
+        grp(list(params), x, use_plan=True)))
+    t_seq = best_of(lambda: jax.block_until_ready(
+        jnp.stack([l(p, x) for l, p in zip(layers, params)])))
+    print(f"[group]     {g} pruned layers, one grouped dispatch: "
+          f"{t_seq / t_grp:.2f}x vs per-layer (bit-identical)")
+
+    # -- 2. sparse MoE: E experts, 3 grouped dispatches per layer -----------
+    cfg = ModelConfig(name="pruned-moe", family="moe", num_layers=1,
+                      d_model=128, num_heads=4, num_kv_heads=4, d_ff=256,
+                      vocab_size=256, num_experts=8, experts_per_token=2,
+                      moe_group_size=64)
+    moe, mp = SparseMoE.create(Initializer(0, jnp.float32), cfg,
+                               block=(16, 16), density=0.25)
+    xt = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 128), jnp.float32)
+    y = moe.apply(mp, cfg, xt)
+    gsum = jax.grad(lambda wi: moe.apply({**mp, "wi": wi}, cfg, xt).sum())(
+        mp["wi"])
+    print(f"[moe]       {cfg.num_experts} experts at density "
+          f"{moe.density:.2f}: out {tuple(y.shape)}, grads reach "
+          f"{float((np.abs(np.asarray(gsum)) > 0).mean()):.0%} of stacked "
+          f"blocks (pad slots pinned to 0)")
+
+    # -- 3. the serving pool: DLMC patterns through the scheduler -----------
+    # 16 magnitude-pruned weights at one DLMC sparsity level: the kept-
+    # block count is sparsity-determined, so the pool shares one bucket
+    # and flushes as a single grouped dispatch.  (A mixed-sparsity pool
+    # still groups — one dispatch per occupied kept-block bucket.)
+    rng = np.random.default_rng(0)
+    sparsity = DLMC_SPARSITIES[2]                       # 0.90
+    reqs = []
+    for i in range(16):
+        w = magnitude_pruned(d_in, d_out, sparsity, block=(16, 16), seed=i)
+        reqs.append(SpmmRequest(
+            a=from_dense(w.T, format=Format.BSR, block=(16, 16)),
+            b=rng.standard_normal((d_in, 32)).astype(np.float32)))
+
+    def engine():
+        return SextansEngine(tm=128, k0=128, chunk=8, impl="jnp")
+
+    outs_g, stats_g = serve_spmm_requests(reqs, engine(), batched=True)
+    outs_s, _ = serve_spmm_requests(reqs, engine(), batched=False)
+    assert all(np.array_equal(a, b) for a, b in zip(outs_g, outs_s))
+    t_g = best_of(lambda: serve_spmm_requests(reqs, engine(), batched=True))
+    t_s = best_of(lambda: serve_spmm_requests(reqs, engine(), batched=False))
+    print(f"[scheduler] {len(reqs)} DLMC-pruned weights -> "
+          f"{stats_g['groups']} bucket groups, "
+          f"{stats_g['dispatches_per_request']:.2f} disp/req: "
+          f"{t_s / t_g:.2f}x grouped vs sequential (bit-identical)")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,8 @@ and raises :class:`InvariantViolation` with the first offending
 coordinate; it understands
 
 * :class:`repro.sparse_api.SparseTensor` (HFLEX or BSR, batched or not,
-  including ``stack_hflex`` groups and ``windows()`` slices),
+  including ``stack_hflex`` / ``stack_bsr`` groups and ``windows()``
+  slices),
 * bare :class:`PackedSpMM` / :class:`BsrWeight` payloads,
 * :class:`repro.core.hflex.PEStreams` (paper-form per-PE streams), and
 * :class:`repro.core.schedule.Schedule` (pass ``rows=`` of the scheduled
@@ -236,10 +237,13 @@ def _validate_tensor(t: Any) -> None:
         _validate_packed(t.data, where=where)
     else:
         w = t.data
-        _validate_bsr(w, where="SparseTensor[BSR]")
+        g = w.batch
+        where = (f"SparseTensor[BSR, G={g}]" if g is not None
+                 else "SparseTensor[BSR]")
+        _validate_bsr(w, where=where)
         # payload stores A^T padded up to tile multiples
         if not (t.m <= w.f and t.k <= w.k):
-            _fail(f"SparseTensor[BSR]: logical shape {t.shape} exceeds "
+            _fail(f"{where}: logical shape {t.shape} exceeds "
                   f"padded weight ({w.f}, {w.k})")
 
 
@@ -252,25 +256,65 @@ def _validate_bsr(w: Any, where: str) -> None:
     blocks = np.asarray(w.blocks)
     brow = np.asarray(w.brow)
     indptr = np.asarray(w.indptr)
-    if blocks.ndim != 3 or blocks.shape[1:] != (w.tk, w.tf):
-        _fail(f"{where}: blocks must be (NB, {w.tk}, {w.tf}), got "
-              f"{blocks.shape}")
     if w.k % w.tk or w.f % w.tf:
         _fail(f"{where}: (K={w.k}, F={w.f}) not multiples of tile "
               f"({w.tk}, {w.tf})")
-    nb = blocks.shape[0]
     nbf = w.f // w.tf
+    if blocks.ndim == 4:
+        # stacked group: per-member arrays behind a leading G axis; NB is
+        # the shared padded bucket, member g truly stores indptr[g, -1]
+        g, nb = blocks.shape[0], blocks.shape[1]
+        if blocks.shape[2:] != (w.tk, w.tf):
+            _fail(f"{where}: blocks must be (G, NB, {w.tk}, {w.tf}), got "
+                  f"{blocks.shape}")
+        if indptr.shape != (g, nbf + 1):
+            _fail(f"{where}: indptr must be (G={g}, F/TF+1={nbf + 1}), "
+                  f"got {indptr.shape}")
+        if brow.shape != (g, nb):
+            _fail(f"{where}: brow must be (G={g}, NB={nb}), got "
+                  f"{brow.shape}")
+        for gi in range(g):
+            nb_true = int(indptr[gi, -1])
+            if nb_true > nb:
+                _fail(f"{where}: member {gi} claims {nb_true} blocks but "
+                      f"the padded bucket holds NB={nb}")
+            _validate_bsr_member(blocks[gi, :nb_true], brow[gi, :nb_true],
+                                 indptr[gi], nb_true, nbf, w,
+                                 f"{where} member {gi}")
+            pad = blocks[gi, nb_true:]
+            if pad.size and (pad != 0).any():
+                _fail(f"{where}: member {gi} has a non-zero padded block "
+                      f"slot at {_first(pad != 0)} (slots >= "
+                      f"indptr[g, -1]={nb_true} must be zero)")
+            pad_brow = brow[gi, nb_true:]
+            if pad_brow.size and ((pad_brow < 0)
+                                  | (pad_brow >= w.k // w.tk)).any():
+                _fail(f"{where}: member {gi} padded brow outside "
+                      f"[0, K/TK={w.k // w.tk})")
+        return
+    if blocks.ndim != 3 or blocks.shape[1:] != (w.tk, w.tf):
+        _fail(f"{where}: blocks must be (NB, {w.tk}, {w.tf}), got "
+              f"{blocks.shape}")
+    nb = blocks.shape[0]
     if indptr.shape != (nbf + 1,):
         _fail(f"{where}: indptr must have F/TF+1={nbf + 1} entries, got "
               f"{indptr.shape}")
+    if brow.shape != (nb,):
+        _fail(f"{where}: brow must have NB={nb} entries, got {brow.shape}")
+    _validate_bsr_member(blocks, brow, indptr, nb, nbf, w, where)
+
+
+def _validate_bsr_member(blocks: np.ndarray, brow: np.ndarray,
+                         indptr: np.ndarray, nb: int, nbf: int,
+                         w: Any, where: str) -> None:
+    """Invariants of one BSR pointer walk (a single weight, or one member
+    of a stacked group with its padding stripped)."""
     if indptr[0] != 0 or indptr[-1] != nb:
         _fail(f"{where}: indptr must run 0..NB={nb}, got "
               f"[{int(indptr[0])}..{int(indptr[-1])}]")
     if (np.diff(indptr) < 0).any():
         _fail(f"{where}: indptr not monotone at "
               f"{_first(np.diff(indptr) < 0)}")
-    if brow.shape != (nb,):
-        _fail(f"{where}: brow must have NB={nb} entries, got {brow.shape}")
     if nb and ((brow < 0) | (brow >= w.k // w.tk)).any():
         bad = (brow < 0) | (brow >= w.k // w.tk)
         _fail(f"{where}: block row {int(brow[bad][0])} outside "

@@ -333,8 +333,10 @@ class SextansEngine:
     ) -> jax.Array:
         """Execute a whole group of bucket-mates as ONE dispatch.
 
-        ``tensors`` is a sequence of same-geometry HFLEX SparseTensors or
-        an already-stacked batched tensor; ``b`` is the stacked dense
+        ``tensors`` is a sequence of same-geometry SparseTensors (HFLEX
+        bucket-mates, or BSR weights sharing tiling — the format is
+        dispatched to ``stack_hflex`` / ``stack_bsr``) or an
+        already-stacked batched tensor; ``b`` is the stacked dense
         operand ``(G, K, N)`` (``c`` likewise ``(G, M, N)`` or None).
         Returns the stacked ``(G, M, N)`` result.
 
@@ -342,12 +344,16 @@ class SextansEngine:
         executable signature (G bucket-mates = 1 miss + G-1 hits — the
         HFlex story), but only one dispatch is issued.
         """
-        from repro.sparse_api import SKINNY_BACKENDS
+        from repro.sparse_api import SKINNY_BACKENDS, Format
         from repro.sparse_api import plan_group as _plan_group
-        from repro.sparse_api import stack_hflex
+        from repro.sparse_api import stack_bsr, stack_hflex
 
         if isinstance(tensors, (list, tuple)):
-            t = stack_hflex([self._as_tensor(x) for x in tensors])
+            ts = [self._as_tensor(x) for x in tensors]
+            if ts and ts[0].format is Format.BSR:
+                t = stack_bsr(ts)
+            else:
+                t = stack_hflex(ts)
         else:
             t = self._as_tensor(tensors)
         g = t.batch

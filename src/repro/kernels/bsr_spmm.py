@@ -30,7 +30,7 @@ from jax.experimental.pallas import tpu as pltpu
 from ._compat import CompilerParams as _CompilerParams
 from ._compat import resolve_interpret as _resolve_interpret
 
-__all__ = ["bsr_matmul_pallas"]
+__all__ = ["bsr_matmul_pallas", "bsr_matmul_pallas_batched"]
 
 
 def _kernel(
@@ -100,5 +100,82 @@ def bsr_matmul_pallas(
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel"),
+        ),
+    )(indptr, brow, x, blocks)
+
+
+def _kernel_batched(
+    indptr_ref,     # (G, NF+1) i32 scalar prefetch
+    brow_ref,       # (G, NB)   i32 scalar prefetch
+    x_ref,          # (1, TB, K) — member g's x stripe for this batch tile
+    blocks_ref,     # (1, NB, TK, TF) — member g's weight blocks
+    o_ref,          # (1, TB, TF)
+    *,
+    tk: int,
+):
+    g = pl.program_id(0)
+    f = pl.program_id(2)
+    start = indptr_ref[g, f]
+    stop = indptr_ref[g, f + 1]
+
+    x = x_ref[0].astype(jnp.float32)        # (TB, K)
+
+    def body(i, acc):
+        kblk = brow_ref[g, i]
+        xs = jax.lax.dynamic_slice_in_dim(x, kblk * tk, tk, axis=1)  # (TB, TK)
+        wb = blocks_ref[0, i].astype(jnp.float32)                    # (TK, TF)
+        return acc + jax.lax.dot_general(
+            xs, wb, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    acc0 = jnp.zeros(o_ref.shape[1:], jnp.float32)
+    o_ref[0] = jax.lax.fori_loop(start, stop, body, acc0).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tb", "tk", "tf", "interpret")
+)
+def bsr_matmul_pallas_batched(
+    x: jax.Array,         # (G, B, K)
+    blocks: jax.Array,    # (G, NB, TK, TF), per member sorted by block-col
+    brow: jax.Array,      # (G, NB) i32
+    indptr: jax.Array,    # (G, NF+1) i32 pointers into blocks per out tile
+    *,
+    tb: int = 128,
+    tk: int = 128,
+    tf: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Batched ``y[g] = x[g] @ W[g]`` over a stacked BSR group — ONE kernel
+    launch for the whole group (leading batch grid dimension, leading-1
+    block specs).  Member ``g`` truly stores ``indptr[g, -1] <= NB``
+    blocks; the pointer walk never reaches the zero padding, so each
+    member's result is bit-identical to :func:`bsr_matmul_pallas` on its
+    own payload.  Output ``(G, B, NF*tf)``."""
+    interpret = _resolve_interpret(interpret)
+    g, bsz, k = x.shape
+    nb = blocks.shape[1]
+    nf = indptr.shape[1] - 1
+    assert bsz % tb == 0 and k % tk == 0
+    assert blocks.shape[0] == g and blocks.shape[2:] == (tk, tf)
+
+    grid = (g, bsz // tb, nf)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tb, k), lambda gg, b, f, ip, br: (gg, b, 0)),
+            pl.BlockSpec((1, nb, tk, tf),
+                         lambda gg, b, f, ip, br: (gg, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tb, tf), lambda gg, b, f, ip, br: (gg, b, f)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_batched, tk=tk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((g, bsz, nf * tf), x.dtype),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
         ),
     )(indptr, brow, x, blocks)

@@ -9,7 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["spmm_dense_ref", "spmm_coo_ref", "spmm_slabs_ref", "bsr_matmul_ref"]
+__all__ = ["spmm_dense_ref", "spmm_coo_ref", "spmm_slabs_ref",
+           "bsr_matmul_ref", "bsr_matmul_ref_batched"]
 
 
 def spmm_dense_ref(a_dense, b, c, alpha=1.0, beta=0.0):
@@ -68,4 +69,28 @@ def bsr_matmul_ref(x, blocks, block_row, block_col, nblk_rows, nblk_cols, alpha=
     w = w.at[block_row, block_col].add(blocks.astype(jnp.float32))
     w = w.transpose(0, 2, 1, 3).reshape(k, f)
     y = jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    return (alpha * y).astype(x.dtype)
+
+
+def bsr_matmul_ref_batched(x, blocks, block_row, block_col,
+                           nblk_rows, nblk_cols, alpha=1.0):
+    """Batched oracle over a stacked BSR group: y[g] = alpha * x[g] @ W[g].
+
+    The group axis folds into the scatter's leading index and the dense
+    contraction's batch dimension, so each member sees exactly the op
+    sequence of :func:`bsr_matmul_ref` — results are bit-identical
+    member-wise.  Out-of-range ``block_col`` entries (the zero padding
+    slots of a stacked group) are dropped by the scatter.
+    """
+    g, nb, tk, tf = blocks.shape
+    k, f = nblk_rows * tk, nblk_cols * tf
+    gi = jnp.arange(g, dtype=jnp.int32)[:, None]
+    w = jnp.zeros((g, nblk_rows, nblk_cols, tk, tf), jnp.float32)
+    w = w.at[gi, block_row, block_col].add(blocks.astype(jnp.float32))
+    w = w.transpose(0, 1, 3, 2, 4).reshape(g, k, f)
+    y = jax.lax.dot_general(
+        x.astype(jnp.float32), w,
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
     return (alpha * y).astype(x.dtype)

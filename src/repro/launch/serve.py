@@ -66,7 +66,9 @@ import numpy as np
 from repro.core.async_pipeline import PackExecutePipeline, SpmmFuture
 from repro.core.engine import SextansEngine
 from repro.core.sparse import SparseMatrix
-from repro.sparse_api import SKINNY_BACKENDS, resolve_backend, stack_hflex
+from repro.sparse_api import (SKINNY_BACKENDS, Format, SparseTensor,
+                              bucket_block_count, resolve_backend,
+                              stack_bsr, stack_hflex)
 
 __all__ = ["SpmmRequest", "SpmmFuture", "SpmmScheduler",
            "serve_spmm_requests", "lm_generate"]
@@ -74,7 +76,17 @@ __all__ = ["SpmmRequest", "SpmmFuture", "SpmmScheduler",
 
 @dataclasses.dataclass
 class SpmmRequest:
-    a: SparseMatrix
+    """One ``C = alpha * A @ B + beta * C`` serving request.
+
+    ``a`` is either a host COO :class:`SparseMatrix` (packed HFLEX by the
+    scheduler's pack stage) or an already-packed :class:`SparseTensor` —
+    the pruned-model serving form: a BSR weight skeleton packed once and
+    submitted many times rides the pack stage as a passthrough, and
+    same-geometry BSR requests group into one batched dispatch exactly
+    like HFLEX bucket-mates.
+    """
+
+    a: Union[SparseMatrix, SparseTensor]
     b: np.ndarray
     c: Optional[np.ndarray] = None
     alpha: float = 1.0
@@ -91,6 +103,15 @@ def _embed(t, m_cap: int, k_cap: int):
 
     d = dataclasses.replace(t.data, m=m_cap, k=k_cap)
     return SparseTensor(data=d, format=t.format, shape=(m_cap, k_cap))
+
+
+def _request_flops(r: SpmmRequest) -> float:
+    """Problem-size FLOPs of one request; packed (SparseTensor) requests
+    use the stored-cell count the way SparseMatrix.problem_size_flop does."""
+    n = r.b.shape[1]
+    if isinstance(r.a, SparseTensor):
+        return 2 * r.a.nnz * n + 3 * r.a.shape[0] * n
+    return r.a.problem_size_flop(n)
 
 
 @dataclasses.dataclass
@@ -311,7 +332,13 @@ class SpmmScheduler:
     # -- pack stage (host-resident, worker-thread safe) ----------------------
 
     def _pack_host(self, r: SpmmRequest):
-        """Pack one request's matrix host-resident; returns (tensor, s)."""
+        """Pack one request's matrix host-resident; returns (tensor, s).
+
+        Already-packed requests (``r.a`` a :class:`SparseTensor` — the
+        pruned-weight serving form) pass straight through: the skeleton
+        was packed once up front, so per-request pack cost is zero."""
+        if isinstance(r.a, SparseTensor):
+            return r.a, 0.0
         t0 = time.perf_counter()
         t = self.engine.pack(r.a, device=False)
         return t, time.perf_counter() - t0
@@ -320,8 +347,23 @@ class SpmmScheduler:
         from repro.core.hflex import bucket_geometry
 
         d = t.data
+        if t.format is Format.BSR:
+            # BSR bucket-mates: same weight tiling (K', F', TK, TF) and a
+            # shared padded block-count bucket (stack_bsr pads every member
+            # up to it), same logical shape, padded dense width, dtype and
+            # epilogue.  Block *counts* may differ within the bucket.
+            nb_b = bucket_block_count(d.nb)
+            n_b = bucket_geometry(1, 1, 1, r.b.shape[1])[3]
+            # ``t.shape`` is deliberate, not a compile hazard: stack_bsr
+            # only accepts members with identical logical (M, K), and the
+            # executable cache keys on the *padded* bucket geometry —
+            # distinct weight shapes could never share a dispatch anyway.
+            return (t.format, (nb_b, d.k, d.f, d.tk, d.tf), t.shape, n_b,  # repro: ignore[trace-hazard] -- grouping key, not a jit key; stack_bsr needs exact (M, K)
+                    np.dtype(np.asarray(r.b).dtype).str,
+                    float(r.alpha), float(r.beta))
         n_b = bucket_geometry(d.mb, d.nw, d.lw, r.b.shape[1])[3]
-        return (t.geometry, n_b, np.dtype(np.asarray(r.b).dtype).str,
+        return (t.format, t.geometry, None, n_b,
+                np.dtype(np.asarray(r.b).dtype).str,
                 float(r.alpha), float(r.beta))
 
     def _route(self, e: _Entry, groups: Dict, stream_lane: List) -> None:
@@ -343,22 +385,31 @@ class SpmmScheduler:
         batched dense operands.  Returns ((stacked, bg, cg, alpha, beta),
         seconds)."""
         t0 = time.perf_counter()
-        n_b = key[1]
-        alpha, beta = key[3], key[4]
-        # Embed to the geometry-constant bounds (MB*TM, NW*K0), NOT the
-        # flush's max member shape: the plan's exec key includes (m, k), so
-        # a flush-dependent bound would recompile whenever ragged traffic
-        # changes the group's largest member.  The slab bounds are shared
-        # by every bucket-mate, making the group executable flush-invariant
-        # (waste is < one row tile + one K window, and the padding rows/
-        # cols are exact zeros — results stay bit-identical).
-        d0 = chunk[0].tensor.data
-        m_cap = d0.mb * d0.tm
-        k_cap = d0.nw * d0.k0
-        stacked = stack_hflex(
-            [_embed(e.tensor, m_cap, k_cap) for e in chunk], device=False)
+        fmt, n_b = key[0], key[3]
+        alpha, beta = key[5], key[6]
         g = len(chunk)
-        np_dtype = np.dtype(key[2])
+        np_dtype = np.dtype(key[4])
+        if fmt is Format.BSR:
+            # BSR members share the exact logical (M, K) (part of the group
+            # key) and the weight tiling; stack_bsr pads block counts up to
+            # the shared bucket.  No ragged embed needed.
+            stacked = stack_bsr([e.tensor for e in chunk], device=False)
+            m_cap, k_cap = chunk[0].tensor.shape
+        else:
+            # Embed to the geometry-constant bounds (MB*TM, NW*K0), NOT the
+            # flush's max member shape: the plan's exec key includes (m, k),
+            # so a flush-dependent bound would recompile whenever ragged
+            # traffic changes the group's largest member.  The slab bounds
+            # are shared by every bucket-mate, making the group executable
+            # flush-invariant (waste is < one row tile + one K window, and
+            # the padding rows/cols are exact zeros — results stay
+            # bit-identical).
+            d0 = chunk[0].tensor.data
+            m_cap = d0.mb * d0.tm
+            k_cap = d0.nw * d0.k0
+            stacked = stack_hflex(
+                [_embed(e.tensor, m_cap, k_cap) for e in chunk],
+                device=False)
         bg = np.zeros((g, k_cap, n_b), np_dtype)
         any_c = any(e.request.c is not None for e in chunk)
         cg = np.zeros((g, m_cap, n_b), np_dtype) if any_c else None
@@ -483,8 +534,8 @@ class SpmmScheduler:
         # ALL pack time is stall, none hidden (overlap_s stays 0)
         self._note_flush(len(pending), ctr, wall, pack_s,
                          stall_s=pack_s, failed=0,
-                         flops=sum(e.request.a.problem_size_flop(
-                             e.request.b.shape[1]) for e in pending))
+                         flops=sum(_request_flops(e.request)
+                                   for e in pending))
         return [
             np.asarray(results[e.ticket][0])[:results[e.ticket][1],
                                              :results[e.ticket][2]]
@@ -614,8 +665,7 @@ class SpmmScheduler:
         ok = [e for e in entries if e.ticket not in failed]
         self._note_flush(len(ok), ctr, wall, pack_s, stall_s,
                          failed=len(restored),
-                         flops=sum(e.request.a.problem_size_flop(
-                             e.request.b.shape[1]) for e in ok))
+                         flops=sum(_request_flops(e.request) for e in ok))
 
     # -- stats ---------------------------------------------------------------
 
@@ -788,7 +838,8 @@ def serve_spmm_requests(
         skinny0 = engine.stats.skinny_dispatches
         for r in requests:
             tp = time.perf_counter()
-            packed = engine.pack(r.a)
+            packed = (r.a if isinstance(r.a, SparseTensor)
+                      else engine.pack(r.a))
             pack_s += time.perf_counter() - tp
             c = None if r.c is None else jnp.asarray(r.c)
             if device_bytes is not None and packed.nbytes > device_bytes:
@@ -814,7 +865,7 @@ def serve_spmm_requests(
             jax.block_until_ready(out)
         wall = time.perf_counter() - t0
         outs = [np.asarray(out) for out in outs]
-        flops = sum(r.a.problem_size_flop(r.b.shape[1]) for r in requests)
+        flops = sum(_request_flops(r) for r in requests)
         groups = len(requests)
         batched_fraction = 0.0
         dispatches_per_request = (dispatches / len(requests)

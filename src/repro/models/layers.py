@@ -24,7 +24,7 @@ __all__ = [
     "mesh_context", "constrain",
     "linear", "rmsnorm_init", "rmsnorm", "rope", "attention_init", "attention_apply",
     "decode_attention_apply", "ffn_init", "ffn_apply", "moe_init", "moe_apply",
-    "SparseLinear",
+    "SparseLinear", "SparseLinearGroup", "SparseMoE",
 ]
 
 # ---------------------------------------------------------------------------
@@ -548,28 +548,18 @@ def moe_init(init: Initializer, cfg: ModelConfig) -> Dict[str, Any]:
     return p
 
 
-@_scoped("moe")
-def moe_apply(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array) -> jax.Array:
-    """GShard-style capacity MoE with expert parallelism over `model`.
+def _moe_route(router: jax.Array, cfg: ModelConfig, xt: jax.Array, dtype):
+    """Shared top-k capacity router (dense and sparse-expert MoE).
 
-    Tokens are grouped; per group a (Tg, E, C) combine/dispatch pair routes
-    top-k tokens into per-expert capacity buffers. Expert weights are
-    sharded over the model axis on E, so the expert matmuls are local and
-    the only EP collective is the combine contraction over E.
+    ``xt``: (g, tg, d) grouped tokens.  Returns ``(combine, dispatch,
+    cap)`` — both (g, tg, e, cap) — the GShard dispatch/combine pair that
+    routes each token's top-k experts into per-expert capacity buffers.
     """
-    dtype = compute_dtype(cfg)
-    b, s, d = x.shape
+    g, tg, _ = xt.shape
     e, k = cfg.num_experts, cfg.experts_per_token
-    t = b * s
-    tg = min(cfg.moe_group_size, t)
-    g = t // tg
-    assert g * tg == t, f"tokens {t} not divisible by group {tg}"
     cap = max(4, int(math.ceil(tg * k / e * cfg.moe_capacity_factor)))
     cap = min(cap, tg)
-
-    xt = x.reshape(g, tg, d)
-    xt = constrain(xt, "data", None, None)
-    logits = jnp.einsum("gtd,de->gte", xt.astype(dtype), p["router"].astype(dtype))
+    logits = jnp.einsum("gtd,de->gte", xt.astype(dtype), router.astype(dtype))
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     gate, idx = jax.lax.top_k(probs, k)                     # (g, tg, k)
     gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
@@ -589,6 +579,28 @@ def moe_apply(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array) -> jax.Array:
     dispatch = jnp.einsum("gtke,gtkc->gtec", eoh, poh)
     combine = constrain(combine, "data", None, "model", None)
     dispatch = constrain(dispatch, "data", None, "model", None)
+    return combine, dispatch, cap
+
+
+@_scoped("moe")
+def moe_apply(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """GShard-style capacity MoE with expert parallelism over `model`.
+
+    Tokens are grouped; per group a (Tg, E, C) combine/dispatch pair routes
+    top-k tokens into per-expert capacity buffers. Expert weights are
+    sharded over the model axis on E, so the expert matmuls are local and
+    the only EP collective is the combine contraction over E.
+    """
+    dtype = compute_dtype(cfg)
+    b, s, d = x.shape
+    t = b * s
+    tg = min(cfg.moe_group_size, t)
+    g = t // tg
+    assert g * tg == t, f"tokens {t} not divisible by group {tg}"
+
+    xt = x.reshape(g, tg, d)
+    xt = constrain(xt, "data", None, None)
+    combine, dispatch, cap = _moe_route(p["router"], cfg, xt, dtype)
 
     # expert input: (g, e, cap, d), sharded (data, model)
     ein = jnp.einsum("gtd,gtec->gecd", xt.astype(dtype), dispatch)
@@ -610,6 +622,27 @@ def moe_apply(p: Dict[str, Any], cfg: ModelConfig, x: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 # SparseLinear: trainable block-sparse projection on the unified sparse API
 # ---------------------------------------------------------------------------
+
+
+def _prune_blocks(w, block: Tuple[int, int], density: float):
+    """Magnitude (block-L2) pruning of a dense ``(d_in, d_out)`` weight:
+    keep the top-``density`` fraction of ``(bi, bo)`` tiles by L2 norm,
+    zero the rest.  Ties at the threshold are all kept, so the survivor
+    count can exceed ``round(density * n_tiles)`` by the tie multiplicity
+    (the grouped lane tolerates ragged kept-block counts)."""
+    import numpy as np
+
+    bi, bo = block
+    d_in, d_out = w.shape
+    if d_in % bi or d_out % bo:
+        raise ValueError("d_in/d_out must be multiples of the block tile")
+    norms = np.linalg.norm(
+        w.reshape(d_in // bi, bi, d_out // bo, bo), axis=(1, 3))
+    keep_n = max(1, int(round(density * norms.size)))
+    thresh = np.sort(norms.reshape(-1))[-keep_n]
+    mask = norms >= thresh
+    return (w.reshape(d_in // bi, bi, d_out // bo, bo)
+            * mask[:, None, :, None]).reshape(d_in, d_out)
 
 
 class SparseLinear:
@@ -653,16 +686,8 @@ class SparseLinear:
         from repro.sparse_api import Format, from_dense
 
         bi, bo = block
-        if d_in % bi or d_out % bo:
-            raise ValueError("d_in/d_out must be multiples of the block tile")
-        w = np.asarray(init.dense(d_in, d_out), np.float32)
-        norms = np.linalg.norm(
-            w.reshape(d_in // bi, bi, d_out // bo, bo), axis=(1, 3))
-        keep_n = max(1, int(round(density * norms.size)))
-        thresh = np.sort(norms.reshape(-1))[-keep_n]
-        mask = norms >= thresh
-        w = (w.reshape(d_in // bi, bi, d_out // bo, bo)
-             * mask[:, None, :, None]).reshape(d_in, d_out)
+        w = _prune_blocks(np.asarray(init.dense(d_in, d_out), np.float32),
+                          block, density)
         skeleton = from_dense(w.T, format=Format.BSR, block=(bo, bi))
         return cls(skeleton), {"w": skeleton.values}
 
@@ -696,3 +721,205 @@ class SparseLinear:
             a = self.skeleton.with_values(params["w"])
             y = spmm(a, xb.T, backend=backend, **opts).T  # (B, d_out)
         return y.reshape(*lead, self.d_out)
+
+
+# ---------------------------------------------------------------------------
+# Grouped execution: expert/layer groups of pruned weights as ONE dispatch
+# ---------------------------------------------------------------------------
+
+
+class SparseLinearGroup:
+    """G same-geometry :class:`SparseLinear` layers as ONE grouped dispatch.
+
+    The classic pruned-serving shape — L transformer layers' q-projections,
+    E expert FFN matrices — is many small *same-geometry* BSR weights.  The
+    skeletons stack once (``stack_bsr``) behind a leading group axis; per
+    call the only work is a values stack plus a single batched spmm, so the
+    whole group costs one kernel launch instead of G.
+
+    ``use_plan=True`` routes through a cached
+    :func:`repro.sparse_api.plan_group` executable (AOT, inference-only);
+    the default path is the differentiable batched ``spmm``.  For pooled
+    serving, :meth:`submit` enqueues the members on a
+    :class:`repro.launch.serve.SpmmScheduler`, whose bucketed-geometry
+    grouping flushes them as one dispatch alongside any other bucket-mates.
+    """
+
+    def __init__(self, layers):
+        from repro.sparse_api import stack_bsr
+
+        layers = list(layers)
+        if not layers:
+            raise ValueError("SparseLinearGroup needs at least one layer")
+        self.layers = layers
+        self.skeleton = stack_bsr([l.skeleton for l in layers])
+        self._plans: Dict[Any, Any] = {}
+
+    @property
+    def batch(self) -> int:
+        return len(self.layers)
+
+    @property
+    def d_in(self) -> int:
+        return self.layers[0].d_in
+
+    @property
+    def d_out(self) -> int:
+        return self.layers[0].d_out
+
+    def stack_values(self, values_list) -> jax.Array:
+        """Member payloads ``(nb_g, TK, TF)`` -> the stacked
+        ``(G, NB_pad, TK, TF)`` payload.  Pad slots are zero; the grouped
+        VJP masks them, so stacked values remain trainable."""
+        nb_pad = self.skeleton.values.shape[1]
+        vs = []
+        for v in values_list:
+            v = jnp.asarray(v)
+            vs.append(jnp.pad(v, ((0, nb_pad - v.shape[0]), (0, 0), (0, 0))))
+        return jnp.stack(vs)
+
+    def plan_for(self, batch: int, *, backend: str = "auto", **opts):
+        from repro.sparse_api import plan_group
+
+        key = (int(batch), backend, tuple(sorted(opts.items())))
+        pl = self._plans.get(key)
+        if pl is None:
+            pl = plan_group(self.skeleton, int(batch), backend=backend, **opts)
+            self._plans[key] = pl
+        return pl
+
+    def __call__(self, params_list, x: jax.Array, *, backend: str = "auto",
+                 use_plan: bool = False, **opts) -> jax.Array:
+        """All G members in one grouped dispatch.
+
+        ``x``: (B, d_in) shared input or (G, B, d_in) per-member inputs.
+        Returns (G, B, d_out).
+        """
+        from repro.sparse_api import spmm
+
+        vals = self.stack_values([p["w"] for p in params_list])
+        if x.ndim == 2:
+            x = jnp.broadcast_to(x[None], (self.batch, *x.shape))
+        xb = jnp.swapaxes(x, -1, -2)                  # (G, d_in, B)
+        if use_plan:
+            pl = self.plan_for(x.shape[1], backend=backend, **opts)
+            y = pl.run(xb, values=vals)
+        else:
+            y = spmm(self.skeleton.with_values(vals), xb,
+                     backend=backend, **opts)
+        return jnp.swapaxes(y, -1, -2)                # (G, B, d_out)
+
+    def submit(self, scheduler, params_list, x) -> list:
+        """Enqueue one pre-packed request per member on an
+        :class:`repro.launch.serve.SpmmScheduler`.  Same-geometry members
+        share a group key, so a flush executes them as one batched
+        dispatch; returns the per-member tickets/futures."""
+        import numpy as np
+
+        from repro.launch.serve import SpmmRequest
+
+        xb = np.asarray(x).T                          # (d_in, B)
+        return [scheduler.submit(SpmmRequest(
+                    a=l.skeleton.with_values(p["w"]), b=xb))
+                for l, p in zip(self.layers, params_list)]
+
+
+class SparseMoE:
+    """Block-pruned MoE on the grouped BSR lane.
+
+    Each expert's ``wi``/``wg``/``wo`` is magnitude-pruned to (nearly) the
+    same kept-block count, so the E experts of each projection stack via
+    :func:`repro.sparse_api.stack_bsr` into one batched tensor and the E
+    expert matmuls execute as ONE grouped dispatch — 3 dispatches per MoE
+    layer instead of 3·E.  Routing reuses the GShard capacity router of
+    :func:`moe_apply`; the trainable payload is the stacked block array
+    ``(E, NB_pad, TK, TF)`` per projection, and the grouped VJP pins the
+    pad slots at exact zero, so pruned experts *train*.
+    """
+
+    def __init__(self, wi, wg, wo):
+        # stacked SparseTensor skeletons, E members each, shapes:
+        #   wi/wg: (d_ff, d_model)   wo: (d_model, d_ff)
+        self.wi, self.wg, self.wo = wi, wg, wo
+
+    @property
+    def num_experts(self) -> int:
+        return self.wi.batch
+
+    @property
+    def density(self) -> float:
+        return self.wi.density
+
+    @classmethod
+    def create(cls, init: Initializer, cfg: ModelConfig,
+               block: Tuple[int, int] = (128, 128),
+               density: float = 0.25) -> Tuple["SparseMoE", Dict[str, Any]]:
+        """Init dense expert weights, block-prune each expert, stack per
+        projection.  ``block`` is the (input-dim, output-dim) tile of each
+        projection.  Returns (layer, params) with ``params["wi"/"wg"/"wo"]``
+        the stacked trainable block values."""
+        import numpy as np
+
+        from repro.sparse_api import Format, from_dense, stack_bsr
+
+        d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+        bi, bo = block
+
+        def stack_proj(w3):
+            w3 = np.asarray(w3, np.float32)
+            members = []
+            for ei in range(e):
+                w = _prune_blocks(w3[ei], block, density)
+                members.append(from_dense(w.T, format=Format.BSR,
+                                          block=(bo, bi)))
+            return stack_bsr(members)
+
+        wi = stack_proj(init.dense(e, d, ff))
+        wg = stack_proj(init.dense(e, d, ff))
+        wo = stack_proj(init.dense(e, ff, d))
+        params = {
+            "router": init.dense(d, e, scale=0.02),
+            "wi": wi.values, "wg": wg.values, "wo": wo.values,
+        }
+        if cfg.shared_expert:
+            params["shared"] = ffn_init(init, d, cfg.shared_expert_ff or ff)
+        return cls(wi, wg, wo), params
+
+    @_scoped("sparse_moe")
+    def apply(self, p: Dict[str, Any], cfg: ModelConfig, x: jax.Array, *,
+              backend: str = "auto", **opts) -> jax.Array:
+        from repro.sparse_api import spmm
+
+        dtype = compute_dtype(cfg)
+        b, s, d = x.shape
+        e = cfg.num_experts
+        t = b * s
+        tg = min(cfg.moe_group_size, t)
+        g = t // tg
+        assert g * tg == t, f"tokens {t} not divisible by group {tg}"
+
+        xt = x.reshape(g, tg, d)
+        xt = constrain(xt, "data", None, None)
+        combine, dispatch, cap = _moe_route(p["router"], cfg, xt, dtype)
+
+        # capacity buffers (g, e, cap, d) -> grouped-spmm right operand
+        # (E, d, g*cap): experts become the spmm group axis, so each
+        # projection below is ONE batched dispatch over all E experts.
+        ein = jnp.einsum("gtd,gtec->gecd", xt.astype(dtype), dispatch)
+        xb = ein.transpose(1, 3, 0, 2).reshape(e, d, g * cap)
+        act = _act(cfg.act)
+        hg = spmm(self.wg.with_values(p["wg"]), xb, backend=backend, **opts)
+        hi = spmm(self.wi.with_values(p["wi"]), xb, backend=backend, **opts)
+        h = act(hg.astype(dtype)) * hi.astype(dtype)          # (E, ff, T)
+        eo = spmm(self.wo.with_values(p["wo"]), h, backend=backend, **opts)
+        eout = (eo.reshape(e, d, g, cap)
+                  .transpose(2, 0, 3, 1).astype(dtype))       # (g, e, cap, d)
+
+        y = jnp.einsum("gecd,gtec->gtd", eout, combine)
+        y = y.reshape(b, s, d)
+        if cfg.shared_expert and "shared" in p:
+            y = y + ffn_apply(p["shared"], cfg, x)
+        return y.astype(dtype)
+
+    def __call__(self, p, cfg, x, **kw) -> jax.Array:
+        return self.apply(p, cfg, x, **kw)

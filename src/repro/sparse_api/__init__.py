@@ -18,10 +18,11 @@ once, ``plan.run(b, c, alpha, beta)`` is a bare compiled call with results
 bit-identical to ``spmm``.
 
 Bucket-mates (same slab geometry) batch into ONE dispatch:
-:func:`stack_hflex` stacks G matrices behind a leading group axis
-(``A.batch``), ``spmm`` then takes ``b`` of shape ``(G, K, N)``, and
-:func:`plan_group` prepares a single group executable; ``plan(..., mesh=)``
-carries multi-chip shardings on the same abstraction.
+:func:`stack_hflex` (HFLEX) / :func:`stack_bsr` (pruned BSR weights)
+stack G matrices behind a leading group axis (``A.batch``), ``spmm`` then
+takes ``b`` of shape ``(G, K, N)``, and :func:`plan_group` prepares a
+single group executable; ``plan(..., mesh=)`` carries multi-chip
+shardings on the same abstraction.
 
 Matrices larger than device memory stream: ``plan(..., device_bytes=)``
 returns a :class:`StreamingPlan` that pipelines K0-window chunks through a
@@ -57,12 +58,14 @@ from .tensor import (
     Format,
     PackedSpMM,
     SparseTensor,
+    bucket_block_count,
     from_bsr_weight,
     from_coo,
     from_dense,
     from_sparse_matrix,
     pack_bsr_weight,
     pack_hflex,
+    stack_bsr,
     stack_hflex,
 )
 
@@ -89,6 +92,8 @@ __all__ = [
     "pack_hflex",
     "pack_bsr_weight",
     "stack_hflex",
+    "stack_bsr",
+    "bucket_block_count",
     "Backend",
     "register_backend",
     "get_backend",

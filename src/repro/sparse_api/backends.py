@@ -37,8 +37,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.partition import cdiv
-from repro.kernels.bsr_spmm import bsr_matmul_pallas
-from repro.kernels.ref import bsr_matmul_ref
+from repro.kernels.bsr_spmm import bsr_matmul_pallas, bsr_matmul_pallas_batched
+from repro.kernels.ref import bsr_matmul_ref, bsr_matmul_ref_batched
 from repro.kernels.sextans_spmm import sextans_spmm_pallas
 from repro.kernels.spmv_vector import sextans_spmv_pallas
 
@@ -503,9 +503,26 @@ _SPMV_STREAM = StreamOps(init=_hflex_spmv_stream_init,
 
 
 def _bsr_raw_jnp(a: SparseTensor, b):
-    """A @ b for BSR: (b^T @ A^T)^T on the stored transposed-weight layout."""
+    """A @ b for BSR: (b^T @ A^T)^T on the stored transposed-weight layout.
+
+    A stacked group (``a.batch``) takes ``b`` of shape ``(G, K, N)``: the
+    group folds into the scatter/contraction batch dimension of
+    :func:`bsr_matmul_ref_batched` — ONE XLA call, bit-identical per
+    member.  Padding slots scatter out of range (``bcol == NBF``) and are
+    dropped; their blocks are zero anyway.
+    """
     w = a.data
     m, k = a.shape
+    if a.batch is not None:
+        nb = w.blocks.shape[1]
+        xb = jnp.pad(b, ((0, 0), (0, w.k - k), (0, 0)))
+        xb = xb.transpose(0, 2, 1)                   # (G, N, K')
+        bcol = jax.vmap(
+            lambda ip: jnp.searchsorted(ip, jnp.arange(nb),
+                                        side="right") - 1)(w.indptr)
+        y = bsr_matmul_ref_batched(xb, w.blocks, w.brow, bcol,
+                                   w.k // w.tk, w.f // w.tf)  # (G, N, M')
+        return y.transpose(0, 2, 1)[:, :m]
     xb = jnp.pad(b, ((0, w.k - k), (0, 0))).T        # (N, K')
     bcol = jnp.searchsorted(
         w.indptr, jnp.arange(w.blocks.shape[0]), side="right") - 1
@@ -522,9 +539,18 @@ def _bsr_jnp(a: SparseTensor, b, c, alpha, beta):
 def _bsr_pallas(a: SparseTensor, b, c, alpha, beta, *, tn, interpret):
     w = a.data
     m, k = a.shape
-    n = b.shape[1]
-    xb = jnp.pad(b, ((0, w.k - k), (0, 0))).T        # (N, K')
+    n = b.shape[-1]
     npad = cdiv(n, tn) * tn
+    if a.batch is not None:
+        xb = jnp.pad(b, ((0, 0), (0, w.k - k), (0, 0)))
+        xb = xb.transpose(0, 2, 1)                   # (G, N, K')
+        xb = jnp.pad(xb, ((0, 0), (0, npad - n), (0, 0)))
+        y = bsr_matmul_pallas_batched(xb, w.blocks, w.brow, w.indptr,
+                                      tb=tn, tk=w.tk, tf=w.tf,
+                                      interpret=interpret)
+        raw = y[:, :n].transpose(0, 2, 1)[:, :m].astype(jnp.float32)
+        return (alpha * raw + beta * c.astype(jnp.float32)).astype(b.dtype)
+    xb = jnp.pad(b, ((0, w.k - k), (0, 0))).T        # (N, K')
     xb = jnp.pad(xb, ((0, npad - n), (0, 0)))
     y = bsr_matmul_pallas(xb, w.blocks, w.brow, w.indptr,
                           tb=tn, tk=w.tk, tf=w.tf, interpret=interpret)

@@ -93,8 +93,17 @@ def _spmm_bwd(name, okey, res, g):
                                           d.vals.ndim - 1)
                  < d.nse[..., None])
         dvals = jnp.where(valid, dvals, 0)
-    # BSR tile-padding cells need no mask: padded b rows are zero and
-    # out-of-bounds output columns have zero cotangent, so their grads
+    elif a.batch is not None:
+        # Stacked BSR: the padded block slots (position >= the true member
+        # count indptr[g, -1]) alias real (brow=0, bcol-dropped) positions
+        # in the reference scatter and would pick up nonzero dW cotangents;
+        # mask them per member like HFLEX's nse mask.
+        d = a.data
+        valid = (jax.lax.broadcasted_iota(jnp.int32, d.blocks.shape, 1)
+                 < d.indptr[:, -1][:, None, None, None])
+        dvals = jnp.where(valid, dvals, 0)
+    # Unbatched-BSR tile-padding cells need no mask: padded b rows are zero
+    # and out-of-bounds output columns have zero cotangent, so their grads
     # vanish by construction.
 
     dc = (beta * g32).astype(c.dtype)

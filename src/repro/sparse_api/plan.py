@@ -80,7 +80,7 @@ from repro.core.hflex import bucket_geometry
 from repro.core.partition import cdiv
 
 from . import backends as _bk
-from .tensor import Format, PackedSpMM, SparseTensor, stack_hflex
+from .tensor import Format, PackedSpMM, SparseTensor, stack_bsr, stack_hflex
 
 __all__ = ["SpmmPlan", "StreamingPlan", "plan", "plan_group",
            "clear_plan_cache", "device_memory_budget", "PLAN_STATS"]
@@ -236,7 +236,7 @@ class SpmmPlan:
             bucket = bucket_geometry(d.mb, d.nw, d.lw, n)
         else:
             d = a.data
-            bucket = (d.blocks.shape[0], d.k, d.f, d.tk, d.tf)
+            bucket = (d.nb, d.k, d.f, d.tk, d.tf)
         self.exec_key = ("flat" if flat else "payload", self.backend, okey,
                          a.format, a.geometry, bucket, (m, k, n), g,
                          str(self.dtype), mesh)
@@ -894,18 +894,27 @@ def plan_group(
 ) -> SpmmPlan:
     """Prepare ONE executable for a whole group of bucket-mates.
 
-    ``tensors`` is either a sequence of same-geometry HFLEX SparseTensors
-    (stacked here via :func:`repro.sparse_api.stack_hflex`) or an
-    already-stacked batched tensor.  The returned plan's :meth:`SpmmPlan.run`
-    takes ``b`` of shape ``(G, K, N)`` (ragged-N callers pad their columns
-    up to the planned ``n``) and executes the whole group as a single
-    compiled-call dispatch; results are bit-identical to running each
-    member through its own plan.
+    ``tensors`` is either a sequence of same-geometry SparseTensors —
+    HFLEX stacked via :func:`repro.sparse_api.stack_hflex`, BSR via
+    :func:`repro.sparse_api.stack_bsr` (the format is dispatched on) — or
+    an already-stacked batched tensor.  The returned plan's
+    :meth:`SpmmPlan.run` takes ``b`` of shape ``(G, K, N)`` (ragged-N
+    callers pad their columns up to the planned ``n``) and executes the
+    whole group as a single compiled-call dispatch; results are
+    bit-identical to running each member through its own plan.
+    ``run(values=...)`` substitutes a stacked non-zero payload of the same
+    structure — N requests against the same pruned skeleton share one
+    executable.
     """
     if isinstance(tensors, SparseTensor):
         a = tensors
         if a.batch is None:
-            a = stack_hflex([a])
+            a = (stack_bsr([a]) if a.format is Format.BSR
+                 else stack_hflex([a]))
     else:
-        a = stack_hflex(tensors)
+        ts = list(tensors)
+        if ts and ts[0].format is Format.BSR:
+            a = stack_bsr(ts)
+        else:
+            a = stack_hflex(ts)
     return SpmmPlan(a, n, backend, opts, dtype=dtype, mesh=mesh)

@@ -49,6 +49,8 @@ __all__ = [
     "from_dense",
     "from_bsr_weight",
     "stack_hflex",
+    "stack_bsr",
+    "bucket_block_count",
 ]
 
 
@@ -114,20 +116,40 @@ class PackedSpMM:
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class BsrWeight:
-    """Block-sparse (K, F) weight: nonzero (TK, TF) tiles, CSC over F tiles."""
+    """Block-sparse (K, F) weight: nonzero (TK, TF) tiles, CSC over F tiles.
 
-    blocks: jax.Array   # (NB, TK, TF)
-    brow: jax.Array     # (NB,) i32
-    indptr: jax.Array   # (NF+1,) i32
+    Arrays are ``(NB, TK, TF)`` / ``(NB,)`` / ``(NF+1,)`` for a single
+    weight, or carry a *leading group axis* ``(G, NB, TK, TF)`` /
+    ``(G, NB)`` / ``(G, NF+1)`` when ``G`` same-geometry weights have been
+    stacked into one dispatch (:func:`stack_bsr`).  NB is then the padded
+    block-count bucket shared by the group; member ``g`` truly stores
+    ``indptr[g, -1] <= NB`` blocks and its padded slots hold zero blocks
+    (the pointer walk never reaches them — they exist only so the group
+    shares one executable, like HFLEX's LW bucket).
+    """
+
+    blocks: jax.Array   # ([G,] NB, TK, TF)
+    brow: jax.Array     # ([G,] NB) i32
+    indptr: jax.Array   # ([G,] NF+1) i32
     k: int = dataclasses.field(metadata=dict(static=True))
     f: int = dataclasses.field(metadata=dict(static=True))
     tk: int = dataclasses.field(metadata=dict(static=True))
     tf: int = dataclasses.field(metadata=dict(static=True))
 
     @property
+    def batch(self) -> Optional[int]:
+        """Group size G for stacked payloads, None for a single weight."""
+        return self.blocks.shape[0] if self.blocks.ndim == 4 else None
+
+    @property
+    def nb(self) -> int:
+        """Stored block count (the padded bucket for stacked payloads)."""
+        return self.blocks.shape[-3]
+
+    @property
     def density(self) -> float:
         nbk, nbf = self.k // self.tk, self.f // self.tf
-        return self.blocks.shape[0] / float(max(nbk * nbf, 1))
+        return self.nb / float(max(nbk * nbf, 1))
 
 
 # ---------------------------------------------------------------------------
@@ -243,12 +265,11 @@ class SparseTensor:
         """Group size G of a stacked (batched) tensor, None if unbatched.
 
         A batched tensor holds G same-geometry matrices behind one leading
-        payload axis (:func:`stack_hflex`); ``shape`` stays the per-member
-        logical ``(M, K)`` and ``spmm`` takes ``b`` of shape ``(G, K, N)``.
+        payload axis (:func:`stack_hflex` / :func:`stack_bsr`); ``shape``
+        stays the per-member logical ``(M, K)`` and ``spmm`` takes ``b`` of
+        shape ``(G, K, N)``.
         """
-        if self.format is Format.HFLEX:
-            return self.data.batch
-        return None
+        return self.data.batch
 
     @property
     def nnz(self) -> int:
@@ -256,8 +277,13 @@ class SparseTensor:
             return self.nse
         if self.format is Format.HFLEX:
             return self.data.nnz
-        nb, tk, tf = self.data.blocks.shape
-        return int(nb * tk * tf)
+        d = self.data
+        tk, tf = d.tk, d.tf
+        if d.blocks.ndim == 4:
+            # member g truly stores indptr[g, -1] blocks; padded slots are
+            # zero filler and do not count
+            return int(np.asarray(d.indptr[..., -1]).sum()) * tk * tf
+        return int(d.nb * tk * tf)
 
     @property
     def density(self) -> float:
@@ -272,7 +298,7 @@ class SparseTensor:
             d = self.data
             return (*d.geometry, d.tm, d.k0, d.chunk, d.interleaved)
         d = self.data
-        return (d.blocks.shape[0], d.k, d.f, d.tk, d.tf)
+        return (d.nb, d.k, d.f, d.tk, d.tf)
 
     @property
     def nbytes(self) -> int:
@@ -328,6 +354,20 @@ class SparseTensor:
         if not -gsz <= g < gsz:
             raise IndexError(f"group index {g} out of range for batch {gsz}")
         d = self.data
+        if self.format is Format.BSR:
+            nb_g = int(np.asarray(d.indptr[g, -1]))
+            data_g = dataclasses.replace(
+                d, blocks=d.blocks[g, :nb_g], brow=d.brow[g, :nb_g],
+                indptr=d.indptr[g])
+            # stored cells inside the logical (M, K) bounds, recomputed the
+            # way from_dense does (edge tiles are part-padding)
+            brow = np.asarray(data_g.brow)
+            bcol = np.searchsorted(np.asarray(data_g.indptr),
+                                   np.arange(nb_g), side="right") - 1
+            nse_g = int((np.clip(self.k - brow * d.tk, 0, d.tk)
+                         * np.clip(self.m - bcol * d.tf, 0, d.tf)).sum())
+            return SparseTensor(data=data_g, format=self.format,
+                                shape=self.shape, nse=nse_g)
         nnz_g = int(np.asarray(d.nse[g]).sum())
         data_g = dataclasses.replace(
             d, vals=d.vals[g], cols=d.cols[g], rows=d.rows[g],
@@ -601,6 +641,86 @@ def stack_hflex(tensors, device: bool = True) -> SparseTensor:
 
     return maybe_validate(
         SparseTensor(data=stacked, format=Format.HFLEX, shape=t0.shape))
+
+
+def bucket_block_count(nb: int, floor: int = 8) -> int:
+    """Round a BSR block count up to its bucket: the next power of two
+    (min ``floor``) — the BSR analogue of the HFLEX LW bucket, so
+    near-miss pruned layers share one compiled executable."""
+    b = floor
+    while b < nb:
+        b *= 2
+    return b
+
+
+def stack_bsr(tensors, device: bool = True) -> SparseTensor:
+    """Stack G same-geometry BSR tensors into one batched SparseTensor.
+
+    The members must share the weight statics ``(K', F', TK, TF)`` and the
+    logical shape ``(M, K)``; their block *counts* may differ — every
+    member is padded to the shared :func:`bucket_block_count` bucket
+    NB_pad with zero blocks (``brow`` padded in-bounds with 0), and the
+    true per-member count survives as ``indptr[g, -1]`` — the BSR twin of
+    HFLEX's per-member ``nse``, used to mask padding cotangents in the
+    backward pass.  Padded slots are inert in the forward pass: the
+    kernel's pointer walk stops at ``indptr[g, -1]`` and the reference
+    path scatters zero blocks.
+
+    ``spmm`` then takes ``b`` of shape ``(G, K, N)`` and the whole group
+    executes as **one** dispatch, bit-identical per member to the
+    unstacked calls.  Round trip: ``stack_bsr(ts).unstack()`` recovers the
+    members (padding stripped, per-member ``nse`` rebuilt).
+
+    ``device=False`` keeps the stacked payload **host-resident** (numpy
+    leaves) so the async serving pipeline's pack stage can stack groups on
+    worker threads; the plan tier performs the single ``device_put`` at
+    dispatch.
+    """
+    ts = list(tensors)
+    if not ts:
+        raise ValueError("stack_bsr needs at least one tensor")
+    for t in ts:
+        if not isinstance(t, SparseTensor):
+            raise TypeError(f"stack_bsr expects SparseTensors, got "
+                            f"{type(t).__name__}")
+        if t.format is not Format.BSR:
+            raise ValueError("stack_bsr supports Format.BSR only")
+        if t.batch is not None:
+            raise ValueError("cannot stack an already-batched tensor")
+    t0 = ts[0]
+    d0 = t0.data
+    for t in ts[1:]:
+        d = t.data
+        if (d.k, d.f, d.tk, d.tf) != (d0.k, d0.f, d0.tk, d0.tf):
+            raise ValueError(
+                f"geometry mismatch: {(d.k, d.f, d.tk, d.tf)} != "
+                f"{(d0.k, d0.f, d0.tk, d0.tf)} — only same-tiling weights "
+                f"can share a dispatch")
+        if t.shape != t0.shape:
+            raise ValueError(
+                f"shape mismatch: {t.shape} != {t0.shape} — members must "
+                f"share the logical (M, K) shape")
+    g = len(ts)
+    nb_pad = bucket_block_count(max(t.data.nb for t in ts))
+    nfp1 = int(np.asarray(d0.indptr).shape[-1])
+    blocks = np.zeros((g, nb_pad, d0.tk, d0.tf), np.float32)
+    brow = np.zeros((g, nb_pad), np.int32)
+    indptr = np.zeros((g, nfp1), np.int32)
+    for i, t in enumerate(ts):
+        d = t.data
+        nb = d.nb
+        blocks[i, :nb] = np.asarray(d.blocks)
+        brow[i, :nb] = np.asarray(d.brow)
+        indptr[i] = np.asarray(d.indptr)
+    conv = np.asarray if not device else jnp.asarray
+    stacked = BsrWeight(blocks=conv(blocks), brow=conv(brow),
+                        indptr=conv(indptr),
+                        k=d0.k, f=d0.f, tk=d0.tk, tf=d0.tf)
+    from repro.analysis.validate import maybe_validate
+
+    return maybe_validate(
+        SparseTensor(data=stacked, format=Format.BSR, shape=t0.shape,
+                     nse=sum(t.nnz for t in ts)))
 
 
 def from_bsr_weight(w: BsrWeight) -> SparseTensor:
