@@ -30,6 +30,11 @@ trajectory can accumulate across PRs):
                kernel at the same widths (bit-identity asserted; Mnnz/s,
                speedup ratio) plus an auto-routed serving pool reporting
                skinny_dispatches
+  autotune_* — autotuned execution geometry + the persistent tuning/plan
+               cache: default vs measured-best plans on a DLMC pruned
+               pattern at the skinny boundary and on forced streaming
+               (bit-identity asserted), cold vs warm plan-build time, and
+               a fresh-process warm start over the same SEXTANS_TUNE_DIR
 
 All wall-clock numbers use ``time.perf_counter`` (monotonic,
 high-resolution); JAX results are ``block_until_ready``-fenced.
@@ -37,6 +42,10 @@ high-resolution); JAX results are ``block_until_ready``-fenced.
 Run:  PYTHONPATH=src python -m benchmarks.run [--budget small|full]
                                               [--json PATH]
                                               [--only SUBSTR]
+
+``--compare OLD.json NEW.json [--tolerance R]`` diffs two ``--json``
+snapshots row-by-row (ratio new/old) and exits 2 on any regression beyond
+the tolerance — the BENCH_*.json trajectory as a PR gate.
 """
 
 from __future__ import annotations
@@ -576,6 +585,235 @@ def bench_bsr_serve() -> None:
          })
 
 
+def bench_autotune() -> None:
+    """Autotuned execution geometry + the persistent tuning/plan cache
+    (``repro.sparse_api.autotune``): default-heuristic vs measured-best
+    execution on a DLMC-style pruned pattern at the skinny-N boundary and
+    on forced streaming (where the tuner picks the window-chunk/column-tile
+    geometry the no-budget heuristic cannot), plus the cold-start story —
+    ``autotune_first_build`` times this process's measure-mode plan build
+    (DB+exec persistence make it cheap on the second run over the same
+    ``SEXTANS_TUNE_DIR``), ``autotune_warm_rebuild`` rebuilds after
+    ``clear_plan_cache()`` from persisted executables, and
+    ``autotune_process2`` boots a fresh interpreter against the same tune
+    dir and reports its time-to-first-dispatch (bit-identity of every
+    tuned result is asserted/recorded throughout).  Uses
+    ``SEXTANS_TUNE_DIR`` when set (the CI smoke sets it to diff a cold vs
+    warm run), otherwise a fresh temp dir."""
+    import hashlib
+    import os
+    import subprocess
+    import sys
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    import repro
+    import repro.sparse_api as sp
+    from repro.core.engine import SextansEngine
+    from repro.core.sparse import power_law_sparse
+    from repro.data.matrices import magnitude_pruned
+    from repro.launch.serve import SpmmRequest, serve_spmm_requests
+
+    if not os.environ.get("SEXTANS_TUNE_DIR"):
+        os.environ["SEXTANS_TUNE_DIR"] = tempfile.mkdtemp(
+            prefix="sextans-tune-")
+    tune_dir = os.environ["SEXTANS_TUNE_DIR"]
+
+    rng = np.random.default_rng(0)
+    # DLMC-style magnitude-pruned weight at the skinny-N boundary (N=8):
+    # backend choice (tall kernel vs SpMV lane vs jnp) is live here
+    w = magnitude_pruned(256, 512, 0.9, block=(16, 16), seed=1)
+    A = sp.from_dense(np.asarray(w.T, np.float32), tm=128, k0=128, chunk=8,
+                      bucket=True)
+    nnz = A.nnz
+    n = 8
+    b = jnp.asarray(rng.standard_normal((A.shape[1], n)), jnp.float32)
+
+    # -- cold-start: first measure-mode build in THIS process.  With a
+    # pre-populated tune dir (CI run 2) the same call is a DB hit plus
+    # persisted-executable loads — no measurement, no compile.
+    ts0 = dict(sp.TUNE_STATS)
+    ps0 = dict(sp.PLAN_STATS)
+    t0 = time.perf_counter()
+    P_tuned = sp.plan(A, n, autotune="measure")
+    build_s = time.perf_counter() - t0
+    _row("autotune_first_build", build_s * 1e6,
+         f"{build_s:.3f}s_db_hits{sp.TUNE_STATS['db_hits'] - ts0['db_hits']}"
+         f"_misses{sp.TUNE_STATS['db_misses'] - ts0['db_misses']}",
+         extra={
+             "build_s": build_s,
+             "tune_db_hits": sp.TUNE_STATS["db_hits"] - ts0["db_hits"],
+             "tune_db_misses": sp.TUNE_STATS["db_misses"] - ts0["db_misses"],
+             "measured": sp.TUNE_STATS["measured"] - ts0["measured"],
+             "exec_persist_hits": (sp.PLAN_STATS["exec_persist_hits"]
+                                   - ps0["exec_persist_hits"]),
+             "exec_persist_stores": (sp.PLAN_STATS["exec_persist_stores"]
+                                     - ps0["exec_persist_stores"]),
+             "tune_dir": tune_dir,
+         })
+
+    # -- default vs tuned throughput at the skinny boundary
+    P_def = sp.plan(A, n)
+    y_ref = np.asarray(P_def.run(b))
+    y_tuned = np.asarray(P_tuned.run(b))
+    bitexact = bool(np.array_equal(y_tuned, y_ref))
+    assert bitexact, "tuned plan diverged from default resolution"
+    us_d = _time_call(lambda: P_def.run(b).block_until_ready(), iters=10)
+    us_t = _time_call(lambda: P_tuned.run(b).block_until_ready(), iters=10)
+    mnnz_d = nnz / (us_d / 1e6) / 1e6
+    mnnz_t = nnz / (us_t / 1e6) / 1e6
+    _row("autotune_skinny_n8_default", us_d,
+         f"{mnnz_d:.2f}Mnnz/s_{P_def.backend}",
+         extra={"mnnz_per_s": mnnz_d, "backend": P_def.backend, "n": n})
+    _row("autotune_skinny_n8_tuned", us_t,
+         f"{mnnz_t:.2f}Mnnz/s_{P_tuned.backend}_"
+         f"{us_d / us_t:.2f}x_vs_default_bitexact",
+         extra={"mnnz_per_s": mnnz_t, "backend": P_tuned.backend, "n": n,
+                "speedup_vs_default": us_d / us_t,
+                "tuned": bool(P_tuned.tuned), "bit_identical": bitexact})
+
+    # -- forced streaming: no budget -> the heuristic takes the finest
+    # granularity (window_chunk=1); the tuner ranks the (wc, n_tile) grid
+    # with the event-cycle model and measures the survivors
+    big = power_law_sparse(1024, 8192, 6, seed=3)
+    B = sp.from_sparse_matrix(big, tm=128, k0=128, chunk=8, bucket=True)
+    bb = rng.standard_normal((8192, 16)).astype(np.float32)
+    S_def = sp.plan(B, 16, backend="jnp", stream=True)
+    S_tun = sp.plan(B, 16, backend="jnp", stream=True, autotune="measure")
+    y_sd = np.asarray(S_def.run(bb))
+    y_st = np.asarray(S_tun.run(bb))
+    sbit = bool(np.array_equal(y_st, y_sd))
+    assert sbit, "tuned streaming diverged from default streaming"
+    us_sd = _time_call(lambda: jax.block_until_ready(S_def.run(bb)), iters=5)
+    us_st = _time_call(lambda: jax.block_until_ready(S_tun.run(bb)), iters=5)
+    mnnz_sd = big.nnz / (us_sd / 1e6) / 1e6
+    mnnz_st = big.nnz / (us_st / 1e6) / 1e6
+    _row("autotune_stream_default", us_sd,
+         f"{mnnz_sd:.1f}Mnnz/s_wc{S_def.window_chunk}_"
+         f"{S_def.window_dispatches}disp",
+         extra={"mnnz_per_s": mnnz_sd, "window_chunk": S_def.window_chunk,
+                "window_dispatches": S_def.window_dispatches})
+    _row("autotune_stream_tuned", us_st,
+         f"{mnnz_st:.1f}Mnnz/s_wc{S_tun.window_chunk}_"
+         f"{S_tun.window_dispatches}disp_{us_sd / us_st:.2f}x_bitexact",
+         extra={"mnnz_per_s": mnnz_st, "window_chunk": S_tun.window_chunk,
+                "window_dispatches": S_tun.window_dispatches,
+                "speedup_vs_default": us_sd / us_st,
+                "tuned": bool(S_tun.tuned), "bit_identical": sbit})
+
+    # -- warm rebuild: drop the in-process plan cache, rebuild in cached
+    # mode — the decision comes from the DB, the executables from the
+    # persisted .jaxexec files (no re-trace/re-compile)
+    ps0 = dict(sp.PLAN_STATS)
+    sp.clear_plan_cache()
+    t0 = time.perf_counter()
+    P_warm = sp.plan(A, n, autotune="cached")
+    warm_s = time.perf_counter() - t0
+    y_warm = np.asarray(P_warm.run(b))
+    wbit = bool(np.array_equal(y_warm, y_ref))
+    assert wbit, "warm-rebuilt plan diverged"
+    _row("autotune_warm_rebuild", warm_s * 1e6,
+         f"{warm_s:.3f}s_persist_hits"
+         f"{sp.PLAN_STATS['exec_persist_hits'] - ps0['exec_persist_hits']}",
+         extra={
+             "build_s": warm_s,
+             "warm_lt_cold": bool(warm_s < build_s),
+             "exec_persist_hits": (sp.PLAN_STATS["exec_persist_hits"]
+                                   - ps0["exec_persist_hits"]),
+             "bit_identical": wbit,
+         })
+
+    # -- process 2: a FRESH interpreter against the same tune dir must
+    # reach its first dispatch without measuring or re-tracing — the
+    # cross-process cold-start kill.  The child rebuilds the same matrix
+    # (deterministic seeds), plans in cached mode, and reports its
+    # time-to-first-dispatch + a result digest the parent checks.
+    child = (
+        "import json, time, hashlib\n"
+        "import numpy as np\n"
+        "import jax.numpy as jnp\n"
+        "import repro.sparse_api as sp\n"
+        "from repro.data.matrices import magnitude_pruned\n"
+        "w = magnitude_pruned(256, 512, 0.9, block=(16, 16), seed=1)\n"
+        "A = sp.from_dense(np.asarray(w.T, np.float32), tm=128, k0=128,\n"
+        "                  chunk=8, bucket=True)\n"
+        "rng = np.random.default_rng(0)\n"
+        "b = jnp.asarray(rng.standard_normal((A.shape[1], 8)), jnp.float32)\n"
+        "t0 = time.perf_counter()\n"
+        "P = sp.plan(A, 8, autotune='cached')\n"
+        "y = np.asarray(P.run(b))\n"
+        "dt = time.perf_counter() - t0\n"
+        "print(json.dumps({'build_s': dt,\n"
+        "                  'db_hits': sp.TUNE_STATS['db_hits'],\n"
+        "                  'db_misses': sp.TUNE_STATS['db_misses'],\n"
+        "                  'persist_hits': sp.PLAN_STATS['exec_persist_hits'],\n"
+        "                  'sha': hashlib.sha256(y.tobytes()).hexdigest()}))\n"
+    )
+    env = dict(os.environ)
+    src_root = os.path.dirname(os.path.dirname(
+        os.path.abspath(repro.__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src_root] + [p for p in env.get("PYTHONPATH", "").split(os.pathsep)
+                      if p])
+    proc = subprocess.run([sys.executable, "-c", child], env=env,
+                          capture_output=True, text=True, check=True)
+    rep = json.loads(proc.stdout.strip().splitlines()[-1])
+    p2bit = rep["sha"] == hashlib.sha256(y_ref.tobytes()).hexdigest()
+    assert p2bit, "process-2 result diverged from process 1"
+    _row("autotune_process2", rep["build_s"] * 1e6,
+         f"{rep['build_s']:.3f}s_to_first_dispatch_db_hits{rep['db_hits']}"
+         f"_persist{rep['persist_hits']}_bitexact",
+         extra={
+             "build_s": rep["build_s"],
+             "tune_db_hits": rep["db_hits"],
+             "tune_db_misses": rep["db_misses"],
+             "exec_persist_hits": rep["persist_hits"],
+             "bit_identical": p2bit,
+         })
+
+    # -- serving pool, default vs engine-tuned: the scheduler threads the
+    # mode into every plan build; on a warm DB the tuned pool's plan
+    # builds are pure lookups (tune_db_misses == 0 on the second run)
+    reqs = [SpmmRequest(
+        a=power_law_sparse(256 + 64 * (i % 2), 320, 5, seed=i),
+        b=rng.standard_normal((320, 8)).astype(np.float32))
+        for i in range(8)]
+
+    def serve(autotune):
+        eng = SextansEngine(tm=128, k0=128, chunk=8, impl="auto",
+                            autotune=autotune)
+        t0 = time.perf_counter()
+        outs, stats = serve_spmm_requests(reqs, eng)
+        return outs, stats, time.perf_counter() - t0
+
+    outs_off, stats_off, dt_off = serve(None)
+    serve("measure")                               # populate / verify DB
+    outs_on, stats_on, dt_on = serve("measure")    # warm: all DB hits
+    pbit = all(np.array_equal(x, y) for x, y in zip(outs_off, outs_on))
+    assert pbit, "tuned serving pool diverged from default"
+    _row("autotune_serve_pool_default", dt_off * 1e6 / len(reqs),
+         f"{len(reqs) / dt_off:.0f}req/s",
+         extra={"requests_per_s": len(reqs) / dt_off})
+    _row("autotune_serve_pool_tuned", dt_on * 1e6 / len(reqs),
+         f"{len(reqs) / dt_on:.0f}req/s_"
+         f"{stats_on['tuned_dispatches']}tuned_"
+         f"db{stats_on['tune_db_hits']}h/{stats_on['tune_db_misses']}m_"
+         "bitexact",
+         extra={
+             "requests_per_s": len(reqs) / dt_on,
+             "tuned_dispatches": stats_on["tuned_dispatches"],
+             "tune_db_hits": stats_on["tune_db_hits"],
+             "tune_db_misses": stats_on["tune_db_misses"],
+             "plan_cache_hits": stats_on["plan_cache_hits"],
+             "plan_cache_misses": stats_on["plan_cache_misses"],
+             "plan_build_warm_s": stats_on["plan_build_warm_s"],
+             "plan_build_cold_s": stats_on["plan_build_cold_s"],
+             "bit_identical": pbit,
+         })
+
+
 def bench_validate() -> None:
     """Run the ``repro.analysis`` invariant validator over every packed
     artifact family the benchmarks dispatch (kernel/plan slabs, streaming
@@ -623,6 +861,50 @@ def bench_validate() -> None:
                 "per_artifact_us": total_us / len(artifacts)})
 
 
+def compare_snapshots(old_path: str, new_path: str,
+                      tolerance: float = 1.25) -> int:
+    """Perf-regression diff between two ``--json`` snapshots.
+
+    Joins rows by name and reports ``new_us / old_us`` per row: a ratio
+    above ``tolerance`` is a REGRESSION, below ``1/tolerance`` an
+    improvement, anything between is noise-tolerant ``ok``.  Rows present
+    in only one snapshot are listed (dropped/added), not judged.  Returns
+    the regression count (the CLI exits 2 when it is nonzero), so the
+    BENCH_*.json trajectory can gate PRs instead of just accumulating.
+    """
+    with open(old_path) as f:
+        old = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    old_rows = {r["name"]: r for r in old.get("rows", [])}
+    new_rows = {r["name"]: r for r in new.get("rows", [])}
+    regressions = 0
+    print("name,old_us,new_us,ratio,verdict")
+    for name, orow in old_rows.items():
+        nrow = new_rows.get(name)
+        if nrow is None:
+            continue
+        ou, nu = float(orow["us"]), float(nrow["us"])
+        ratio = nu / ou if ou > 0 else float("inf")
+        if ratio > tolerance:
+            verdict = "REGRESSION"
+            regressions += 1
+        elif ratio < 1.0 / tolerance:
+            verdict = "improved"
+        else:
+            verdict = "ok"
+        print(f"{name},{ou:.1f},{nu:.1f},{ratio:.3f},{verdict}")
+    dropped = sorted(set(old_rows) - set(new_rows))
+    added = sorted(set(new_rows) - set(old_rows))
+    if dropped:
+        print(f"# dropped rows ({len(dropped)}): {','.join(dropped)}")
+    if added:
+        print(f"# added rows ({len(added)}): {','.join(added)}")
+    print(f"# {regressions} regression(s) at tolerance {tolerance:.2f}x "
+          f"over {len(set(old_rows) & set(new_rows))} shared rows")
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--budget", choices=("small", "full"), default="small")
@@ -636,7 +918,21 @@ def main() -> None:
                          "benchmark input is invariant-checked at plan/"
                          "dispatch time) and append validate_* overhead "
                          "rows")
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"),
+                    default=None,
+                    help="diff two --json snapshots instead of running "
+                         "benchmarks; exits 2 if any shared row regressed "
+                         "beyond --tolerance")
+    ap.add_argument("--tolerance", type=float, default=1.25,
+                    help="regression threshold for --compare (ratio "
+                         "new/old; default 1.25)")
     args, _ = ap.parse_known_args()
+    if args.compare:
+        import sys
+
+        regressions = compare_snapshots(args.compare[0], args.compare[1],
+                                        tolerance=args.tolerance)
+        sys.exit(2 if regressions else 0)
     if args.validate:
         import os
 
@@ -653,6 +949,7 @@ def main() -> None:
         ("bsr_serve", bench_bsr_serve),
         ("stream", bench_stream),
         ("spmv", bench_spmv),
+        ("autotune", bench_autotune),
     ]
     if args.validate:
         sections.append(("validate", bench_validate))

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -78,11 +79,34 @@ class EngineStats:
     cache_misses: int = 0
     padded_slots: int = 0
     real_nnz: int = 0
+    # -- plan-cache counters (plan_for's bounded dict; uniform visibility
+    #    for warm-start claims — previously only exec misses were
+    #    observable) --
+    plan_cache_hits: int = 0
+    plan_cache_misses: int = 0
+    plan_cache_evictions: int = 0
+    # -- autotuning (see repro.sparse_api.autotune) --
+    tuned_dispatches: int = 0   # dispatches run through a DB-tuned plan
+    tune_db_hits: int = 0       # TuningDB lookups resolved during plan builds
+    tune_db_misses: int = 0
+    # plan-build wall time, split by whether the build compiled something
+    # (cold: PLAN_STATS exec_misses grew — trace+compile and, in measure
+    # mode, tuning measurement) or reused executables (warm: cache or
+    # cross-process persisted load)
+    plan_builds_cold: int = 0
+    plan_builds_warm: int = 0
+    plan_build_cold_s: float = 0.0
+    plan_build_warm_s: float = 0.0
 
     @property
     def hit_rate(self) -> float:
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    @property
+    def plan_cache_hit_rate(self) -> float:
+        total = self.plan_cache_hits + self.plan_cache_misses
+        return self.plan_cache_hits / total if total else 0.0
 
     @property
     def dispatches_per_call(self) -> float:
@@ -110,6 +134,7 @@ class SextansEngine:
         bucket: bool = True,
         interpret: Optional[bool] = None,
         use_plans: bool = True,
+        autotune: Optional[str] = None,
     ):
         self.tm, self.k0, self.chunk, self.tn = tm, k0, chunk, tn
         self.impl = impl
@@ -117,6 +142,10 @@ class SextansEngine:
         self.bucket = bucket
         self.interpret = interpret
         self.use_plans = use_plans
+        #: autotune mode threaded into every plan build: "off" | "cached" |
+        #: "measure" (None defers to $SEXTANS_AUTOTUNE; see
+        #: repro.sparse_api.autotune).  Mutable config, not guarded state.
+        self.autotune = autotune
         self.stats = EngineStats()
         #: the StreamingPlan the most recent spmm_streaming call ran
         #: through — per-call stats (steps, peak_payload_bytes) for callers
@@ -223,19 +252,45 @@ class SextansEngine:
             key += ("stream", device_bytes, window_chunk, n_tile)
         with self._lock:
             hit = self._plans.get(key)
+            if hit is not None:
+                self.stats.plan_cache_hits += 1
         if hit is not None:
             return hit[1]
+        from repro.sparse_api import PLAN_STATS, TUNE_STATS
+
+        # Snapshot the module counters around the build so this engine's
+        # stats attribute the deltas to itself: a build that grew
+        # exec_misses compiled something (cold); one that did not reused a
+        # cached or cross-process persisted executable (warm).
+        db_hits0 = TUNE_STATS["db_hits"]
+        db_misses0 = TUNE_STATS["db_misses"]
+        exec_misses0 = PLAN_STATS["exec_misses"]
         t = self._as_tensor(packed)
+        t0 = time.perf_counter()
         if stream:
             pl = _plan(t, n, backend=self.impl, dtype=dtype, stream=True,
                        device_bytes=device_bytes, window_chunk=window_chunk,
-                       n_tile=n_tile, tn=self.tn, interpret=self.interpret)
+                       n_tile=n_tile, tn=self.tn, interpret=self.interpret,
+                       autotune=self.autotune)
         else:
             pl = _plan(t, n, backend=self.impl, dtype=dtype,
-                       tn=self.tn, interpret=self.interpret)
+                       tn=self.tn, interpret=self.interpret,
+                       autotune=self.autotune)
+        build_s = time.perf_counter() - t0
+        cold = PLAN_STATS["exec_misses"] > exec_misses0
         with self._lock:
+            self.stats.plan_cache_misses += 1
+            self.stats.tune_db_hits += TUNE_STATS["db_hits"] - db_hits0
+            self.stats.tune_db_misses += TUNE_STATS["db_misses"] - db_misses0
+            if cold:
+                self.stats.plan_builds_cold += 1
+                self.stats.plan_build_cold_s += build_s
+            else:
+                self.stats.plan_builds_warm += 1
+                self.stats.plan_build_warm_s += build_s
             while len(self._plans) >= self.PLAN_CACHE_CAP:
                 self._plans.pop(next(iter(self._plans)))
+                self.stats.plan_cache_evictions += 1
             self._plans[key] = (packed, pl)
         return pl
 
@@ -265,6 +320,9 @@ class SextansEngine:
             # Pass the *caller's* object: the plan cache keys on its id, so
             # legacy PackedSpMM inputs hit the cache across calls.
             pl = self.plan_for(packed, b.shape[1], b.dtype)
+            if pl.tuned:
+                with self._lock:
+                    self.stats.tuned_dispatches += 1
             return pl.run(b, c, alpha, beta)
         return spmm(t, b, c, alpha, beta, backend=self.impl,
                     tn=self.tn, interpret=self.interpret)
@@ -309,6 +367,8 @@ class SextansEngine:
                pl.n_tile)
         with self._lock:
             self.last_streaming_plan = pl
+            if pl.tuned:
+                self.stats.tuned_dispatches += 1
             if sig in self._seen_signatures:
                 self.stats.cache_hits += 1
             else:
@@ -375,9 +435,27 @@ class SextansEngine:
             self.stats.group_calls += 1
             if sig[-1] in SKINNY_BACKENDS:
                 self.stats.skinny_dispatches += 1
+        from repro.sparse_api import TUNE_STATS
+
+        # group plans bypass plan_for's cache — attribute their TuningDB
+        # traffic here so engine stats stay uniform across paths
+        db_hits0 = TUNE_STATS["db_hits"]
+        db_misses0 = TUNE_STATS["db_misses"]
         pl = _plan_group(t, n, backend=self.impl, dtype=b.dtype,
-                         tn=self.tn, interpret=self.interpret)
+                         tn=self.tn, interpret=self.interpret,
+                         autotune=self.autotune)
+        with self._lock:
+            self.stats.tune_db_hits += TUNE_STATS["db_hits"] - db_hits0
+            self.stats.tune_db_misses += TUNE_STATS["db_misses"] - db_misses0
+            if pl.tuned:
+                self.stats.tuned_dispatches += 1
         return pl.run(b, c, alpha, beta)
+
+    def stats_snapshot(self) -> EngineStats:
+        """A consistent copy of the counters, safe to diff around a
+        dispatch while the async pipeline's threads keep mutating them."""
+        with self._lock:
+            return dataclasses.replace(self.stats)
 
     # -- async pipeline -----------------------------------------------------
 

@@ -29,6 +29,7 @@ __all__ = [
     "PLATFORMS",
     "analytic_cycles",
     "event_cycles",
+    "packed_event_cycles",
     "platform_time",
     "throughput_gflops",
     "bandwidth_utilization",
@@ -131,6 +132,53 @@ def event_cycles(
 
     total = (t_init + nwin * t_stream_b + pe_cycles + t_comp_c) * cdiv(n, params.N0)
     return float(total)
+
+
+def packed_event_cycles(
+    q,
+    n: int,
+    params: Optional[SextansParams] = None,
+    *,
+    k0: Optional[int] = None,
+    window_chunk: Optional[int] = None,
+    n_tile: Optional[int] = None,
+    dispatch_overhead_cycles: float = 0.0,
+) -> float:
+    """Event-cycle model evaluated directly on a packed pointer matrix
+    ``q`` of shape ``(..., MB, NW)`` — the autotuner's ranking model.
+
+    Per window, cost is the max over row-block slabs of that window's
+    chunk-ceiled slot count (loose FIFO lockstep — the same reduction
+    :func:`event_cycles` applies to scheduled streams, here read off the
+    packed artifact instead of re-scheduling); leading (group) axes add
+    their members' window costs, matching one-dispatch group execution.
+
+    ``window_chunk`` / ``n_tile`` model a streaming plan's 2-D execution
+    grid: the whole matrix is swept once per column tile (``ceil(N /
+    n_tile)``, each tile ``ceil(n_tile / N0)`` PU passes wide), and each
+    of the ``ceil(NW / window_chunk) * n_tiles`` dispatches is charged
+    ``dispatch_overhead_cycles`` on top of compute — the term that makes
+    coarse chunks beat the finest granularity and lets the tuner rank
+    streaming geometries without compiling any of them.
+    """
+    params = params or SextansParams()
+    q = np.asarray(q, dtype=np.float64)
+    if q.ndim < 2:
+        raise ValueError("q must have shape (..., MB, NW)")
+    per_window = q.max(axis=-2)
+    if per_window.ndim > 1:
+        per_window = per_window.sum(axis=tuple(range(per_window.ndim - 1)))
+    nw = int(per_window.shape[-1])
+    k0 = int(k0 or params.K0)
+    pe_cycles = float(per_window.sum())
+    t_stream_b = nw * k0 / (2 * params.F_B)
+    ntile = int(n_tile) if n_tile else int(n)
+    wc = int(window_chunk) if window_chunk else nw
+    n_tiles = cdiv(int(n), ntile)
+    pu_passes = cdiv(ntile, params.N0)
+    grid = cdiv(nw, wc) * n_tiles
+    return float((pe_cycles + t_stream_b) * pu_passes * n_tiles
+                 + dispatch_overhead_cycles * grid)
 
 
 def platform_time(

@@ -138,6 +138,15 @@ class _FlushCounters:
     n_tiles: int = 0          # column-tile high-water among streamed requests
     skinny: int = 0           # dispatches that resolved to the SpMV lane
     peak: int = 0
+    # engine-stat deltas attributed to this flush (autotuning + plan cache;
+    # see EngineStats): dispatches that ran a DB-tuned plan, TuningDB
+    # lookups resolved while building this flush's plans, and the cold
+    # (compiled) vs warm (cache/persisted-exec) plan-build wall split.
+    tuned: int = 0
+    db_hits: int = 0
+    db_misses: int = 0
+    build_cold_s: float = 0.0
+    build_warm_s: float = 0.0
 
 
 class SpmmScheduler:
@@ -223,9 +232,15 @@ class SpmmScheduler:
                  window_chunk: Optional[int] = None,
                  n_tile: Optional[int] = None,
                  async_pipeline: bool = False,
-                 pack_threads: Optional[int] = None):
+                 pack_threads: Optional[int] = None,
+                 autotune: Optional[str] = None):
         self.engine = engine or SextansEngine(tm=128, k0=512, chunk=8,
                                               impl="jnp")
+        if autotune is not None:
+            # thread the tuning mode into every plan the engine builds for
+            # this scheduler ("off" | "cached" | "measure"); omit to keep
+            # whatever mode the caller's engine already carries
+            self.engine.autotune = autotune
         if max_group < 1:
             raise ValueError("max_group must be >= 1")
         self.max_group = max_group
@@ -248,6 +263,11 @@ class SpmmScheduler:
             "n_tiles": 0,
             "skinny_dispatches": 0,
             "peak_payload_bytes": 0,
+            "tuned_dispatches": 0,
+            "tune_db_hits": 0,
+            "tune_db_misses": 0,
+            "plan_build_cold_s": 0.0,
+            "plan_build_warm_s": 0.0,
             "failed": 0,
             "flushes": 0,
             "wall_s": 0.0,
@@ -424,6 +444,18 @@ class SpmmScheduler:
 
     # -- dispatch stage ------------------------------------------------------
 
+    def _fold_engine_deltas(self, ctr: _FlushCounters, before) -> None:
+        """Attribute the engine-stat growth since ``before`` (an
+        ``engine.stats_snapshot()`` taken when this flush's dispatch stage
+        started) to the flush's counters — tuned dispatches, TuningDB
+        traffic and the cold/warm plan-build wall split."""
+        after = self.engine.stats_snapshot()
+        ctr.tuned = after.tuned_dispatches - before.tuned_dispatches
+        ctr.db_hits = after.tune_db_hits - before.tune_db_hits
+        ctr.db_misses = after.tune_db_misses - before.tune_db_misses
+        ctr.build_cold_s = after.plan_build_cold_s - before.plan_build_cold_s
+        ctr.build_warm_s = after.plan_build_warm_s - before.plan_build_warm_s
+
     def _count_skinny(self, tensor, b, ctr: _FlushCounters) -> None:
         """Bump ``ctr.skinny`` when this dispatch resolves to the SpMV
         lane — the same resolution (operand included) the engine performs."""
@@ -513,6 +545,7 @@ class SpmmScheduler:
 
         results: Dict[int, Tuple[jax.Array, int, int]] = {}
         ctr = _FlushCounters()
+        es0 = eng.stats_snapshot()
         for key, members in groups.items():
             for lo in range(0, len(members), self.max_group):
                 chunk = members[lo:lo + self.max_group]
@@ -529,6 +562,7 @@ class SpmmScheduler:
             self._dispatch_stream(e, results, ctr)
         for out, _, _ in results.values():
             jax.block_until_ready(out)
+        self._fold_engine_deltas(ctr, es0)
         wall = time.perf_counter() - t0
         # synchronous mode: packing is fully serialized with execution, so
         # ALL pack time is stall, none hidden (overlap_s stays 0)
@@ -614,6 +648,7 @@ class SpmmScheduler:
 
         results: Dict[int, Tuple[jax.Array, int, int]] = {}
         ctr = _FlushCounters()
+        es0 = self.engine.stats_snapshot()
         for chunk in singles:           # no host prep — dispatch first
             e = chunk[0]
             try:
@@ -645,6 +680,7 @@ class SpmmScheduler:
                 self._dispatch_stream(e, results, ctr)
             except Exception as exc:        # noqa: BLE001
                 failed[e.ticket] = exc
+        self._fold_engine_deltas(ctr, es0)
 
         # resolve strictly in ticket order: a done future implies every
         # earlier future of the flush is done (submit-order determinism
@@ -685,6 +721,11 @@ class SpmmScheduler:
             st["n_tiles"] = max(st["n_tiles"], ctr.n_tiles)
             st["skinny_dispatches"] += ctr.skinny
             st["peak_payload_bytes"] = max(st["peak_payload_bytes"], ctr.peak)
+            st["tuned_dispatches"] += ctr.tuned
+            st["tune_db_hits"] += ctr.db_hits
+            st["tune_db_misses"] += ctr.db_misses
+            st["plan_build_cold_s"] += ctr.build_cold_s
+            st["plan_build_warm_s"] += ctr.build_warm_s
             st["failed"] += failed
             st["flushes"] += 1
             st["wall_s"] += wall
@@ -701,6 +742,11 @@ class SpmmScheduler:
                 "window_dispatches": ctr.window_disp,
                 "n_tiles": ctr.n_tiles,
                 "skinny_dispatches": ctr.skinny,
+                "tuned_dispatches": ctr.tuned,
+                "tune_db_hits": ctr.db_hits,
+                "tune_db_misses": ctr.db_misses,
+                "plan_build_cold_s": ctr.build_cold_s,
+                "plan_build_warm_s": ctr.build_warm_s,
                 "failed": failed,
                 "wall_s": wall,
                 "preprocess_s": pack_s,
@@ -744,6 +790,7 @@ def serve_spmm_requests(
     device_bytes: Optional[int] = None,
     window_chunk: Optional[int] = None,
     n_tile: Optional[int] = None,
+    autotune: Optional[str] = None,
 ) -> Tuple[List[np.ndarray], Dict[str, Any]]:
     """Run a pool of SpMM requests; returns results + serving stats.
 
@@ -770,10 +817,22 @@ def serve_spmm_requests(
     ``compute_gflops`` (wall − *non-hidden* preprocessing — the paper
     reports execution separately from preprocessing; hidden pack time IS
     execution-overlapped time).
+
+    ``autotune`` threads a tuning mode ("off" | "cached" | "measure") into
+    every plan the pool builds (see :mod:`repro.sparse_api.autotune`); the
+    stats then report ``tuned_dispatches``, TuningDB traffic
+    (``tune_db_hits`` / ``tune_db_misses``), the plan cache
+    (``plan_cache_hits`` / ``plan_cache_misses`` / ``plan_cache_evictions``)
+    and the cold-vs-warm plan-build wall split — a warm process (DB +
+    persisted executables populated) shows ``plan_build_warm_s`` in place
+    of the cold trace/compile/measure time.
     """
     from repro.sparse_api import PLAN_STATS
 
     engine = engine or SextansEngine(tm=128, k0=512, chunk=8, impl="jnp")
+    if autotune is not None:
+        engine.autotune = autotune
+    es0 = engine.stats_snapshot()
     exec0 = PLAN_STATS["exec_misses"]
     streamed = 0
     window_dispatches = 0
@@ -891,6 +950,22 @@ def serve_spmm_requests(
         "cache_misses": engine.stats.cache_misses,
         "plan_executables_compiled": PLAN_STATS["exec_misses"] - exec0,
     }
+    # engine-delta reporting, uniform across the batched / async /
+    # sequential paths: plan-cache visibility and the autotuning story
+    es1 = engine.stats_snapshot()
+    stats.update({
+        "plan_cache_hits": es1.plan_cache_hits - es0.plan_cache_hits,
+        "plan_cache_misses": es1.plan_cache_misses - es0.plan_cache_misses,
+        "plan_cache_evictions": (es1.plan_cache_evictions
+                                 - es0.plan_cache_evictions),
+        "tuned_dispatches": es1.tuned_dispatches - es0.tuned_dispatches,
+        "tune_db_hits": es1.tune_db_hits - es0.tune_db_hits,
+        "tune_db_misses": es1.tune_db_misses - es0.tune_db_misses,
+        "plan_builds_cold": es1.plan_builds_cold - es0.plan_builds_cold,
+        "plan_builds_warm": es1.plan_builds_warm - es0.plan_builds_warm,
+        "plan_build_cold_s": es1.plan_build_cold_s - es0.plan_build_cold_s,
+        "plan_build_warm_s": es1.plan_build_warm_s - es0.plan_build_warm_s,
+    })
     return outs, stats
 
 

@@ -31,6 +31,17 @@ persistent C accumulator (bit-identical to the resident path), and
 accumulation).
 """
 
+from .autotune import (
+    AUTOTUNE_MODES,
+    TUNE_SCHEMA,
+    TUNE_STATS,
+    TuningDB,
+    apply_skinny_from_db,
+    get_db,
+    tune_key,
+    tune_plan,
+    tune_skinny_threshold,
+)
 from .backends import (
     BACKEND_STATS,
     SKINNY_BACKENDS,
@@ -42,6 +53,8 @@ from .backends import (
     register_backend,
     resolve_backend,
     set_auto_policy,
+    set_skinny_n_max,
+    skinny_n_max,
 )
 from .ops import spmm, spmm_raw, spmm_streaming
 from .plan import (
@@ -103,4 +116,15 @@ __all__ = [
     "BACKEND_STATS",
     "SKINNY_N_MAX",
     "SKINNY_BACKENDS",
+    "skinny_n_max",
+    "set_skinny_n_max",
+    "AUTOTUNE_MODES",
+    "TUNE_SCHEMA",
+    "TUNE_STATS",
+    "TuningDB",
+    "get_db",
+    "tune_key",
+    "tune_plan",
+    "tune_skinny_threshold",
+    "apply_skinny_from_db",
 ]

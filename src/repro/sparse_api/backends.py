@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 import threading
 from typing import Callable, Dict, FrozenSet, List, Optional
 
@@ -56,12 +57,45 @@ __all__ = [
     "BACKEND_STATS",
     "SKINNY_N_MAX",
     "SKINNY_BACKENDS",
+    "skinny_n_max",
+    "set_skinny_n_max",
 ]
 
-# The auto policy routes HFLEX requests with N at or below this width to the
-# dedicated SpMV lane ("spmv" on TPU, its flat-jnp twin elsewhere) — the
-# paper's SNAP/SuiteSparse graph workloads live at N = 1..8.
+# Default auto-policy skinny-N routing width: HFLEX requests with N at or
+# below the threshold go to the dedicated SpMV lane ("spmv" on TPU, its
+# flat-jnp twin elsewhere) — the paper's SNAP/SuiteSparse graph workloads
+# live at N = 1..8.  The *live* threshold is ``skinny_n_max()``: this
+# constant is only its lowest-precedence fallback (kept as a module
+# attribute for back-compat).
 SKINNY_N_MAX = 8
+
+_SKINNY_OVERRIDE: Optional[int] = None
+
+
+def skinny_n_max() -> int:
+    """The auto policy's live skinny-N routing threshold.
+
+    Precedence: a :func:`set_skinny_n_max` override (the autotuner pushes
+    DB-tuned values through it — see
+    ``repro.sparse_api.autotune.apply_skinny_from_db``) >
+    ``$SEXTANS_SKINNY_N_MAX`` > the built-in ``SKINNY_N_MAX`` (8).
+    """
+    if _SKINNY_OVERRIDE is not None:
+        return _SKINNY_OVERRIDE
+    env = os.environ.get("SEXTANS_SKINNY_N_MAX")
+    if env:
+        try:
+            return max(0, int(env))
+        except ValueError:
+            pass
+    return SKINNY_N_MAX
+
+
+def set_skinny_n_max(value: Optional[int]) -> None:
+    """Override the skinny-N routing threshold (``None`` restores the
+    env/default precedence chain).  ``0`` disables the skinny lane."""
+    global _SKINNY_OVERRIDE
+    _SKINNY_OVERRIDE = None if value is None else max(0, int(value))
 
 # Backend names that constitute the skinny lane (engine/scheduler stats
 # count dispatches routed through them as ``skinny_dispatches``).
@@ -201,10 +235,11 @@ def _operand_width(b) -> Optional[int]:
 def _default_auto_policy(a: SparseTensor, b, platform: Optional[str] = None) -> str:
     """Pick a backend from platform / format / density / dense width N.
 
-    * HFLEX requests whose dense operand is skinny (N ≤ ``SKINNY_N_MAX``)
-      are SpMV-shaped: they take the dedicated vector lane — ``spmv`` on
-      TPU, its flat-jnp twin elsewhere (unless density already rules the
-      slab format out, below);
+    * HFLEX requests whose dense operand is skinny (N ≤ the tunable
+      :func:`skinny_n_max` threshold) are SpMV-shaped: they take the
+      dedicated vector lane — ``spmv`` on TPU, its flat-jnp twin
+      elsewhere (unless density already rules the slab format out,
+      below);
     * off-TPU the Pallas kernels run in interpret mode — the XLA ``jnp``
       path is the production one;
     * on TPU, BSR always goes to the tile kernel;
@@ -213,7 +248,7 @@ def _default_auto_policy(a: SparseTensor, b, platform: Optional[str] = None) -> 
     """
     platform = platform or jax.default_backend()
     n = _operand_width(b)
-    if (a.format is Format.HFLEX and n is not None and n <= SKINNY_N_MAX
+    if (a.format is Format.HFLEX and n is not None and n <= skinny_n_max()
             and not (platform == "tpu" and a.density > 0.25)):
         return "spmv" if platform == "tpu" else "spmv_jnp"
     if platform != "tpu":

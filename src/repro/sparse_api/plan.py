@@ -90,8 +90,13 @@ __all__ = ["SpmmPlan", "StreamingPlan", "plan", "plan_group",
 # batched scheduler's amortization target: dispatches << requests).
 # ``window_dispatches`` counts the streaming tier's per-chunk dispatches
 # separately (they are deliberate pipeline steps, not missed batching).
+# ``exec_persist_hits``/``exec_persist_stores`` count executables loaded
+# from / saved to the $SEXTANS_TUNE_DIR cross-process store (a persist hit
+# also counts as an exec_hit: the trace+compile was avoided either way).
 PLAN_STATS: Dict[str, int] = {"exec_hits": 0, "exec_misses": 0,
-                              "dispatches": 0, "window_dispatches": 0}
+                              "dispatches": 0, "window_dispatches": 0,
+                              "exec_persist_hits": 0,
+                              "exec_persist_stores": 0}
 
 _EXEC_CACHE: Dict[Tuple, Any] = {}
 
@@ -112,15 +117,49 @@ def clear_plan_cache() -> None:
 
 def _aot_compile(key: Tuple, fn, arg_shapes, in_shardings=None,
                  out_shardings=None, donate_argnums=None):
-    """Lower + compile ``fn`` for ``arg_shapes`` once per cache key."""
+    """Lower + compile ``fn`` for ``arg_shapes`` once per cache key.
+
+    With ``$SEXTANS_TUNE_DIR`` set, misses first try the cross-process
+    executable store (``autotune.load_exec`` — serialized by an earlier
+    process under the same exec key, jax version and platform) before
+    paying the trace+compile, and freshly compiled executables are
+    persisted back (best-effort).  Mesh-sharded executables are excluded:
+    shardings bind to the live device topology.
+    """
     with _EXEC_LOCK:
         hit = _EXEC_CACHE.get(key)
         if hit is not None:
             PLAN_STATS["exec_hits"] += 1
             return hit
+        if in_shardings is None:
+            loaded = _persisted_exec_load(key)
+            if loaded is not None:
+                _EXEC_CACHE[key] = loaded
+                PLAN_STATS["exec_hits"] += 1
+                PLAN_STATS["exec_persist_hits"] += 1
+                return loaded
         PLAN_STATS["exec_misses"] += 1
-        return _aot_compile_locked(key, fn, arg_shapes, in_shardings,
-                                   out_shardings, donate_argnums)
+        compiled = _aot_compile_locked(key, fn, arg_shapes, in_shardings,
+                                       out_shardings, donate_argnums)
+        if in_shardings is None and _persisted_exec_save(key, compiled):
+            PLAN_STATS["exec_persist_stores"] += 1
+        return compiled
+
+
+def _persisted_exec_load(key):
+    from . import autotune as _at
+
+    if _at.tune_dir() is None:
+        return None
+    return _at.load_exec(key)
+
+
+def _persisted_exec_save(key, compiled) -> bool:
+    from . import autotune as _at
+
+    if _at.tune_dir() is None:
+        return False
+    return _at.save_exec(key, compiled)
 
 
 def _aot_compile_locked(key, fn, arg_shapes, in_shardings,
@@ -200,6 +239,10 @@ class SpmmPlan:
     * ``exec_key`` — the executable-cache key (bucketed geometry + logical
       shape + N + group size + dtypes + backend/options + mesh).
     """
+
+    #: True when a TuningDB decision steered this plan's backend/tiling
+    #: (set by ``plan()``/``plan_group()``; engines count tuned dispatches).
+    tuned = False
 
     def __init__(self, a: SparseTensor, n: int, backend: str,
                  opts: Dict[str, Any], dtype=jnp.float32, mesh=None):
@@ -440,6 +483,9 @@ class StreamingPlan:
 
     group = None
     mesh = None
+    #: True when a TuningDB decision steered this plan's tiling (see
+    #: :class:`SpmmPlan.tuned`).
+    tuned = False
 
     def __init__(self, a: SparseTensor, n: int, backend: str,
                  opts: Dict[str, Any], dtype=jnp.float32,
@@ -830,6 +876,7 @@ def plan(
     stream: Optional[bool] = None,
     window_chunk: Optional[int] = None,
     n_tile: Optional[int] = None,
+    autotune: Optional[str] = None,
     **opts,
 ) -> Union[SpmmPlan, "StreamingPlan"]:
     """Prepare ``alpha * A @ b + beta * c`` for dense operands of width ``n``.
@@ -856,7 +903,23 @@ def plan(
     it).  Streaming requires an unbatched HFLEX matrix without a mesh —
     oversized batched/mesh plans raise rather than silently pinning more
     memory than the device has.
+
+    ``autotune`` consults the persistent
+    :class:`repro.sparse_api.autotune.TuningDB` at backend/tiling
+    resolution time: ``"cached"`` applies a stored measured decision when
+    one exists, ``"measure"`` additionally tunes on a miss (enumerate →
+    perfmodel-prune → measure best-of-N, bit-identity guarded) and stores
+    the result; ``None`` defers to ``$SEXTANS_AUTOTUNE`` (default
+    ``"off"``).  Only knobs the caller left open are ever overridden —
+    ``backend`` when ``"auto"``, ``window_chunk``/``n_tile`` when unset
+    on a streaming plan — and the returned plan's ``tuned`` flag records
+    whether a DB decision applied.  Mesh plans are never tuned.
     """
+    mode = "off"
+    if mesh is None:
+        from .autotune import resolve_mode, resolve_plan_knobs
+
+        mode = resolve_mode(autotune)
     budget: Optional[int] = None
     if device_bytes is not None:
         budget = (device_memory_budget() if device_bytes == "auto"
@@ -868,19 +931,29 @@ def plan(
             m, k = a.shape
             working = a.nbytes + (k * n + 2 * m * n) * itemsize
             stream = working > budget
+    tuned = False
+    if mode != "off":
+        backend, window_chunk, n_tile, tuned = resolve_plan_knobs(
+            a, n, dtype=jnp.dtype(dtype), mode=mode, backend=backend,
+            stream=bool(stream), device_bytes=budget,
+            window_chunk=window_chunk, n_tile=n_tile, opts=opts)
     if stream:
         if mesh is not None:
             raise ValueError(
                 "streaming plans cannot carry a mesh; shard rows across "
                 "chips first, then stream each shard (device_bytes applies "
                 "per chip)")
-        return StreamingPlan(a, n, backend, opts, dtype=dtype,
-                             device_bytes=budget, window_chunk=window_chunk,
-                             n_tile=n_tile)
+        spl = StreamingPlan(a, n, backend, opts, dtype=dtype,
+                            device_bytes=budget, window_chunk=window_chunk,
+                            n_tile=n_tile)
+        spl.tuned = tuned
+        return spl
     if n_tile is not None:
         raise ValueError("n_tile applies to streaming plans only (pass "
                          "stream=True or a device_bytes budget)")
-    return SpmmPlan(a, n, backend, opts, dtype=dtype, mesh=mesh)
+    pl = SpmmPlan(a, n, backend, opts, dtype=dtype, mesh=mesh)
+    pl.tuned = tuned
+    return pl
 
 
 def plan_group(
@@ -890,6 +963,7 @@ def plan_group(
     backend: str = "auto",
     dtype=jnp.float32,
     mesh=None,
+    autotune: Optional[str] = None,
     **opts,
 ) -> SpmmPlan:
     """Prepare ONE executable for a whole group of bucket-mates.
@@ -905,6 +979,10 @@ def plan_group(
     ``run(values=...)`` substitutes a stacked non-zero payload of the same
     structure — N requests against the same pruned skeleton share one
     executable.
+
+    ``autotune`` behaves as in :func:`plan` (group plans tune the backend
+    choice only — they are always resident; the tuning key carries the
+    group size, so a G=16 pool and a singleton tune independently).
     """
     if isinstance(tensors, SparseTensor):
         a = tensors
@@ -917,4 +995,16 @@ def plan_group(
             a = stack_bsr(ts)
         else:
             a = stack_hflex(ts)
-    return SpmmPlan(a, n, backend, opts, dtype=dtype, mesh=mesh)
+    tuned = False
+    if mesh is None:
+        from .autotune import resolve_mode, resolve_plan_knobs
+
+        mode = resolve_mode(autotune)
+        if mode != "off":
+            backend, _, _, tuned = resolve_plan_knobs(
+                a, n, dtype=jnp.dtype(dtype), mode=mode, backend=backend,
+                stream=False, device_bytes=None, window_chunk=None,
+                n_tile=None, opts=opts, group=a.batch)
+    pl = SpmmPlan(a, n, backend, opts, dtype=dtype, mesh=mesh)
+    pl.tuned = tuned
+    return pl

@@ -8,7 +8,8 @@ from repro.core.engine import SextansEngine
 from repro.core.partition import SextansParams
 from repro.core.perfmodel import (
     PLATFORMS, analytic_cycles, bandwidth_utilization, event_cycles,
-    gpu_model_time, platform_time, table1_breakdown, throughput_gflops,
+    gpu_model_time, packed_event_cycles, platform_time, table1_breakdown,
+    throughput_gflops,
 )
 from repro.core.sparse import banded_sparse, power_law_sparse, random_sparse, spmm_reference
 
@@ -155,3 +156,101 @@ class TestPerfModel:
                           cycles=event_cycles(a, 64, pp))
         u = bandwidth_utilization(a, 64, t, PLATFORMS["SEXTANS"])
         assert 0.001 < u < 0.6
+
+
+class TestPackedEventModel:
+    """``packed_event_cycles`` — the autotuner's ranking model, evaluated
+    straight off the packed pointer matrix (no re-scheduling)."""
+
+    def _q(self, mb=4, nw=8, seed=0, lo=4, hi=40):
+        r = np.random.default_rng(seed)
+        return r.integers(lo, hi, size=(mb, nw)).astype(np.float64)
+
+    def test_matches_shape_contract(self):
+        with pytest.raises(ValueError):
+            packed_event_cycles(np.zeros(5), 8)
+
+    def test_wider_n_costs_more(self):
+        q = self._q()
+        pp = SextansParams()
+        c8 = packed_event_cycles(q, 8, pp)
+        c64 = packed_event_cycles(q, 64, pp)
+        assert c64 > c8
+        # one PU pass per N0 columns: cost is linear in ceil(n/N0)
+        passes = lambda n: -(-n // pp.N0)  # noqa: E731
+        assert c64 == pytest.approx(c8 * passes(64) / passes(8), rel=1e-6)
+
+    def test_dispatch_overhead_prefers_coarse_chunks(self):
+        """With per-dispatch overhead, coarser window_chunk wins — the term
+        that lets the tuner beat the finest-granularity default."""
+        q = self._q(nw=64)
+        fine = packed_event_cycles(q, 8, window_chunk=1,
+                                   dispatch_overhead_cycles=1e5)
+        coarse = packed_event_cycles(q, 8, window_chunk=64,
+                                     dispatch_overhead_cycles=1e5)
+        assert coarse < fine
+        # ...and with zero overhead the chunking itself is cost-neutral
+        assert packed_event_cycles(q, 8, window_chunk=1) == pytest.approx(
+            packed_event_cycles(q, 8, window_chunk=64))
+
+    def test_n_tile_grid_multiplies_overhead(self):
+        q = self._q(nw=16)
+        one = packed_event_cycles(q, 256, n_tile=256, window_chunk=4,
+                                  dispatch_overhead_cycles=1e4)
+        four = packed_event_cycles(q, 256, n_tile=64, window_chunk=4,
+                                   dispatch_overhead_cycles=1e4)
+        # 4 column tiles -> 4x the dispatches; same compute volume
+        assert four > one
+
+    def test_group_axis_sums_members(self):
+        """Stacked (group) members add their PE window costs; the dense-B
+        stream term is charged once — group execution shares the operand."""
+        q1, q2 = self._q(seed=1), self._q(seed=2)
+        stacked = np.stack([q1, q2])
+        pp = SextansParams()
+        s = packed_event_cycles(stacked, 8, pp)
+        c1 = packed_event_cycles(q1, 8, pp)
+        c2 = packed_event_cycles(q2, 8, pp)
+        t_stream_b = q1.shape[-1] * pp.K0 / (2 * pp.F_B)
+        assert max(c1, c2) < s < c1 + c2
+        assert s == pytest.approx(c1 + c2 - t_stream_b, rel=1e-6)
+
+    def test_rank_agreement_with_measurement(self):
+        """Perfmodel-as-ranking smoke: across operand widths the model's
+        ordering must rank-agree (Spearman rho >= 0.7) with measured
+        wall time of the executed plans — the contract the autotuner's
+        candidate pruning relies on."""
+        import time
+
+        import repro.sparse_api as sp
+
+        def spearman(xs, ys):
+            rx = np.argsort(np.argsort(xs)).astype(float)
+            ry = np.argsort(np.argsort(ys)).astype(float)
+            rx -= rx.mean()
+            ry -= ry.mean()
+            return float((rx * ry).sum()
+                         / np.sqrt((rx ** 2).sum() * (ry ** 2).sum()))
+
+        from repro.core.sparse import to_dense
+
+        a = power_law_sparse(512, 1024, 6, seed=7)
+        A = sp.from_dense(to_dense(a), tm=128, k0=128, chunk=8)
+        pp = SextansParams()
+        widths = (1, 8, 64, 256)
+        model = [packed_event_cycles(np.asarray(A.data.q), n, pp,
+                                     k0=A.data.k0) for n in widths]
+        r = np.random.default_rng(0)
+        walls = []
+        for n in widths:
+            b = jnp.asarray(r.standard_normal((A.shape[1], n)), jnp.float32)
+            P = sp.plan(A, n, backend="jnp")
+            P.run(b).block_until_ready()          # warm the executable
+            best = min(
+                (lambda t0: (P.run(b).block_until_ready(),
+                             time.perf_counter() - t0)[1])(
+                    time.perf_counter())
+                for _ in range(5))
+            walls.append(best)
+        rho = spearman(np.asarray(model), np.asarray(walls))
+        assert rho >= 0.7, (widths, model, walls, rho)

@@ -195,6 +195,80 @@ class TestAutoPolicyTable:
                                   platform="tpu") == "pallas"
 
 
+class TestSkinnyThresholdTunable:
+    """The skinny-N routing boundary is live-tunable: a
+    ``set_skinny_n_max`` override (what ``apply_skinny_from_db`` pushes)
+    beats ``$SEXTANS_SKINNY_N_MAX`` beats the built-in 8."""
+
+    def _A(self):
+        m, k = 64, 128
+        rng = np.random.default_rng(0)
+        d = np.zeros((m, k), np.float32)
+        nnz = max(1, int(m * k * 0.05))
+        d[rng.integers(0, m, nnz), rng.integers(0, k, nnz)] = 1.0
+        return sp.from_dense(d, tm=32, k0=32, chunk=8)
+
+    def _b(self, n):
+        return np.zeros((128, n), np.float32)
+
+    @pytest.mark.parametrize("thr", [2, 12])
+    def test_override_moves_the_boundary(self, thr):
+        A = self._A()
+        try:
+            sp.set_skinny_n_max(thr)
+            assert sp.skinny_n_max() == thr
+            assert _default_auto_policy(A, self._b(thr),
+                                        platform="cpu") == "spmv_jnp"
+            assert _default_auto_policy(A, self._b(thr + 1),
+                                        platform="cpu") == "jnp"
+            assert _default_auto_policy(A, self._b(thr),
+                                        platform="tpu") == "spmv"
+            assert _default_auto_policy(A, self._b(thr + 1),
+                                        platform="tpu") == "pallas"
+        finally:
+            sp.set_skinny_n_max(None)
+
+    def test_zero_disables_the_lane(self):
+        A = self._A()
+        try:
+            sp.set_skinny_n_max(0)
+            assert _default_auto_policy(A, self._b(1),
+                                        platform="cpu") == "jnp"
+        finally:
+            sp.set_skinny_n_max(None)
+
+    def test_env_beats_default_override_beats_env(self, monkeypatch):
+        monkeypatch.setenv("SEXTANS_SKINNY_N_MAX", "12")
+        assert sp.skinny_n_max() == 12
+        A = self._A()
+        assert _default_auto_policy(A, self._b(12),
+                                    platform="cpu") == "spmv_jnp"
+        try:
+            sp.set_skinny_n_max(3)
+            assert sp.skinny_n_max() == 3       # override wins over env
+            assert _default_auto_policy(A, self._b(12),
+                                        platform="cpu") == "jnp"
+        finally:
+            sp.set_skinny_n_max(None)
+        assert sp.skinny_n_max() == 12          # env chain restored
+
+    def test_bad_env_falls_back_to_default(self, monkeypatch):
+        monkeypatch.setenv("SEXTANS_SKINNY_N_MAX", "not-a-number")
+        assert sp.skinny_n_max() == sp.SKINNY_N_MAX
+
+    def test_plan_routing_follows_live_threshold(self):
+        """``plan(backend="auto")`` consults the live threshold, so a
+        DB-tuned value changes routing without re-imports."""
+        _, A, _, _ = _packed()
+        try:
+            sp.set_skinny_n_max(2)
+            assert sp.plan(A, 4).backend not in sp.SKINNY_BACKENDS
+            sp.set_skinny_n_max(16)
+            assert sp.plan(A, 16).backend in sp.SKINNY_BACKENDS
+        finally:
+            sp.set_skinny_n_max(None)
+
+
 class TestSkinnyRouting:
     def test_plan_resolves_lane(self):
         _, A, _, _ = _packed()
