@@ -69,6 +69,9 @@ class EngineStats:
     dispatches: int = 0       # compiled-call dispatches issued (group: 1 for
                               # G members; streaming: window steps + epilogue)
     group_calls: int = 0      # batched group dispatches among the above
+    abvec_group_calls: int = 0  # group dispatches carrying a per-member
+                              # (alpha, beta) vector — epilogues folded into
+                              # a shared group by the serving policy
     streamed: int = 0         # problems served through the out-of-core tier
     window_dispatches: int = 0  # K0-window-chunk dispatches (streaming,
                               # summed over column tiles)
@@ -403,6 +406,12 @@ class SextansEngine:
         Every member counts as one served problem against the *shared*
         executable signature (G bucket-mates = 1 miss + G-1 hits — the
         HFlex story), but only one dispatch is issued.
+
+        ``alpha``/``beta`` may each be a scalar or a ``(G,)`` vector of
+        per-member epilogue coefficients (the serving policy's epilogue
+        fold): member ``g`` computes ``alpha[g] * A_g @ B_g + beta[g] *
+        C_g``, bit-identical to a scalar call with that member's
+        coefficients.
         """
         from repro.sparse_api import SKINNY_BACKENDS, Format
         from repro.sparse_api import plan_group as _plan_group
@@ -423,6 +432,7 @@ class SextansEngine:
         b = jnp.asarray(b)
         n = b.shape[-1]
         sig = self.signature(t, n, b)
+        ab_vec = jnp.ndim(alpha) > 0 or jnp.ndim(beta) > 0
         with self._lock:
             for _ in range(g):
                 if sig in self._seen_signatures:
@@ -433,6 +443,8 @@ class SextansEngine:
             self.stats.calls += g
             self.stats.dispatches += 1
             self.stats.group_calls += 1
+            if ab_vec:
+                self.stats.abvec_group_calls += 1
             if sig[-1] in SKINNY_BACKENDS:
                 self.stats.skinny_dispatches += 1
         from repro.sparse_api import TUNE_STATS

@@ -143,6 +143,7 @@ def packed_event_cycles(
     window_chunk: Optional[int] = None,
     n_tile: Optional[int] = None,
     dispatch_overhead_cycles: float = 0.0,
+    lw: Optional[int] = None,
 ) -> float:
     """Event-cycle model evaluated directly on a packed pointer matrix
     ``q`` of shape ``(..., MB, NW)`` — the autotuner's ranking model.
@@ -160,11 +161,20 @@ def packed_event_cycles(
     ``dispatch_overhead_cycles`` on top of compute — the term that makes
     coarse chunks beat the finest granularity and lets the tuner rank
     streaming geometries without compiling any of them.
+
+    ``lw`` charges every window the full padded slab width instead of its
+    real trip count — the cost shape of flat (XLA segment-sum) execution,
+    which scatters every padded slot, and the term the serving-tier merge
+    policy uses to price LW-bucket padding waste against the dispatch it
+    saves.  Leave it ``None`` (trip-count costing) for pallas-style
+    execution that early-outs on ``q``.
     """
     params = params or SextansParams()
     q = np.asarray(q, dtype=np.float64)
     if q.ndim < 2:
         raise ValueError("q must have shape (..., MB, NW)")
+    if lw is not None:
+        q = np.full_like(q, float(lw))
     per_window = q.max(axis=-2)
     if per_window.ndim > 1:
         per_window = per_window.sum(axis=tuple(range(per_window.ndim - 1)))

@@ -55,7 +55,8 @@ def _kernel(
     rows_ref,         # ([1,] 1, 1, LW) i32
     b_ref,            # ([1,] K0, TN)
     cin_ref,          # ([1,] TM, TN)
-    ab_ref,           # (1, 2) f32 in SMEM: [alpha, beta] (traced epilogue)
+    ab_ref,           # (1, 2) f32 SMEM block: [alpha, beta] (traced
+                      # epilogue; batched runs may index it per group)
     out_ref,          # ([1,] TM, TN)
     acc_ref,          # VMEM scratch (TM, TN) f32
     *,
@@ -166,8 +167,8 @@ def sextans_spmm_pallas(
     q: jax.Array,         # ([G,] MB, NW) i32
     b: jax.Array,         # ([G,] NW*K0, N_pad)
     c_in: jax.Array,      # ([G,] MB*TM, N_pad)
-    alpha: jax.Array = 1.0,   # traced scalar
-    beta: jax.Array = 0.0,    # traced scalar
+    alpha: jax.Array = 1.0,   # traced scalar, or (G,) vector when batched
+    beta: jax.Array = 0.0,    # traced scalar, or (G,) vector when batched
     *,
     tm: int,
     k0: int,
@@ -181,7 +182,11 @@ def sextans_spmm_pallas(
     the user-facing API (handles packing, padding, permutation, autodiff).
 
     ``alpha``/``beta`` are *dynamic* operands (delivered to the kernel as a
-    (1, 2) SMEM block): sweeping them re-uses one compiled executable.
+    (1, 2) SMEM block): sweeping them re-uses one compiled executable.  In
+    batched mode they may also be ``(G,)`` vectors — each group member's
+    epilogue reads its own SMEM row, bit-identical to running that member
+    alone with its scalar (α, β), which lets a serving scheduler fold
+    mixed-epilogue requests into one group dispatch.
     ``interpret=None`` (the default) interprets only off-TPU — on a TPU the
     kernel compiles through Mosaic without the caller opting in.
 
@@ -216,9 +221,16 @@ def sextans_spmm_pallas(
     else:
         assert c_in.shape == (mb * tm, npad)
 
-    ab = jnp.stack(
-        [jnp.asarray(alpha, jnp.float32), jnp.asarray(beta, jnp.float32)]
-    ).reshape(1, 2)
+    a_f = jnp.asarray(alpha, jnp.float32)
+    b_f = jnp.asarray(beta, jnp.float32)
+    ab_vec = batched and (a_f.ndim > 0 or b_f.ndim > 0)
+    if ab_vec:
+        # Per-member epilogue: ab is (G, 2) and each grid group reads its
+        # own SMEM row.  Scalars broadcast, so mixed scalar/vector works.
+        ab = jnp.stack([jnp.broadcast_to(a_f, (g_sz,)),
+                        jnp.broadcast_to(b_f, (g_sz,))], axis=-1)
+    else:
+        ab = jnp.stack([a_f, b_f]).reshape(1, 2)
 
     kern = functools.partial(
         _kernel,
@@ -234,8 +246,10 @@ def sextans_spmm_pallas(
             pl.BlockSpec((1, 1, 1, lw), lambda g, m, n, w, q_: (g, m, w, 0)),
             pl.BlockSpec((1, k0, tn), lambda g, m, n, w, q_: (g, w, n)),
             pl.BlockSpec((1, tm, tn), lambda g, m, n, w, q_: (g, m, n)),
-            pl.BlockSpec((1, 2), lambda g, m, n, w, q_: (0, 0),
-                         memory_space=pltpu.SMEM),
+            (pl.BlockSpec((1, 2), lambda g, m, n, w, q_: (g, 0),
+                          memory_space=pltpu.SMEM) if ab_vec else
+             pl.BlockSpec((1, 2), lambda g, m, n, w, q_: (0, 0),
+                          memory_space=pltpu.SMEM)),
         ]
         out_specs = pl.BlockSpec((1, tm, tn), lambda g, m, n, w, q_: (g, m, n))
         out_shape = jax.ShapeDtypeStruct((g_sz, mb * tm, npad), out_dtype)

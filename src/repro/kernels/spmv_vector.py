@@ -141,8 +141,8 @@ def sextans_spmv_pallas(
     q: jax.Array,         # ([G,] MB, NW) i32
     b: jax.Array,         # ([G,] NW*K0, NV)
     c_in: jax.Array,      # ([G,] MB*TM, NV)
-    alpha: jax.Array = 1.0,   # traced scalar
-    beta: jax.Array = 0.0,    # traced scalar
+    alpha: jax.Array = 1.0,   # traced scalar, or (G,) vector when batched
+    beta: jax.Array = 0.0,    # traced scalar, or (G,) vector when batched
     *,
     tm: int,
     k0: int,
@@ -178,9 +178,16 @@ def sextans_spmv_pallas(
     else:
         assert c_in.shape == (mb * tm, nv)
 
-    ab = jnp.stack(
-        [jnp.asarray(alpha, jnp.float32), jnp.asarray(beta, jnp.float32)]
-    ).reshape(1, 2)
+    a_f = jnp.asarray(alpha, jnp.float32)
+    b_f = jnp.asarray(beta, jnp.float32)
+    ab_vec = batched and (a_f.ndim > 0 or b_f.ndim > 0)
+    if ab_vec:
+        # Per-member epilogue (see sextans_spmm): (G, 2), one SMEM row per
+        # group, bit-identical to the member's scalar epilogue.
+        ab = jnp.stack([jnp.broadcast_to(a_f, (g_sz,)),
+                        jnp.broadcast_to(b_f, (g_sz,))], axis=-1)
+    else:
+        ab = jnp.stack([a_f, b_f]).reshape(1, 2)
 
     kern = functools.partial(
         _kernel,
@@ -196,8 +203,10 @@ def sextans_spmv_pallas(
             pl.BlockSpec((1, 1, 1, lw), lambda g, m, w, q_: (g, m, w, 0)),
             pl.BlockSpec((1, k0, nv), lambda g, m, w, q_: (g, w, 0)),
             pl.BlockSpec((1, tm, nv), lambda g, m, w, q_: (g, m, 0)),
-            pl.BlockSpec((1, 2), lambda g, m, w, q_: (0, 0),
-                         memory_space=pltpu.SMEM),
+            (pl.BlockSpec((1, 2), lambda g, m, w, q_: (g, 0),
+                          memory_space=pltpu.SMEM) if ab_vec else
+             pl.BlockSpec((1, 2), lambda g, m, w, q_: (0, 0),
+                          memory_space=pltpu.SMEM)),
         ]
         out_specs = pl.BlockSpec((1, tm, nv), lambda g, m, w, q_: (g, m, 0))
         out_shape = jax.ShapeDtypeStruct((g_sz, mb * tm, nv), out_dtype)

@@ -66,11 +66,12 @@ import numpy as np
 from repro.core.async_pipeline import PackExecutePipeline, SpmmFuture
 from repro.core.engine import SextansEngine
 from repro.core.sparse import SparseMatrix
+from repro.launch.policy import FLAT_BACKENDS, GroupSketch, MergePolicy
 from repro.sparse_api import (SKINNY_BACKENDS, Format, SparseTensor,
-                              bucket_block_count, resolve_backend,
+                              bucket_block_count, repad_lw, resolve_backend,
                               stack_bsr, stack_hflex)
 
-__all__ = ["SpmmRequest", "SpmmFuture", "SpmmScheduler",
+__all__ = ["SpmmRequest", "SpmmFuture", "SpmmScheduler", "MergePolicy",
            "serve_spmm_requests", "lm_generate"]
 
 
@@ -84,6 +85,14 @@ class SpmmRequest:
     submitted many times rides the pack stage as a passthrough, and
     same-geometry BSR requests group into one batched dispatch exactly
     like HFLEX bucket-mates.
+
+    ``deadline_s`` is the request's latency budget in seconds *relative
+    to submit time* (None = no deadline): the background flusher
+    (``SpmmScheduler(background_flush=True)``) admits the request's group
+    no later than ``deadline_margin_s`` before it expires.  ``priority``
+    orders admitted groups within a flush (higher first; ties by ticket).
+    Both are validated at ``submit()`` — negative or NaN values are
+    rejected with a ``ValueError``, never silently queued.
     """
 
     a: Union[SparseMatrix, SparseTensor]
@@ -91,6 +100,8 @@ class SpmmRequest:
     c: Optional[np.ndarray] = None
     alpha: float = 1.0
     beta: float = 0.0
+    deadline_s: Optional[float] = None
+    priority: float = 0.0
 
 
 def _embed(t, m_cap: int, k_cap: int):
@@ -117,13 +128,16 @@ def _request_flops(r: SpmmRequest) -> float:
 @dataclasses.dataclass
 class _Entry:
     """One queued request: its ticket, and — in async mode — the owning
-    future plus the in-flight pack (``pack``) / packed tensor state."""
+    future plus the in-flight pack (``pack``) / packed tensor state.
+    ``submit_ts`` (``time.monotonic()``) anchors the request's latency
+    sample and its ``deadline_s`` expiry."""
 
     ticket: int
     request: SpmmRequest
     future: Optional[SpmmFuture] = None
     pack: Any = None          # concurrent.futures.Future of _pack_host
     tensor: Any = None        # host-resident SparseTensor once packed
+    submit_ts: float = 0.0
 
 
 @dataclasses.dataclass
@@ -138,6 +152,12 @@ class _FlushCounters:
     n_tiles: int = 0          # column-tile high-water among streamed requests
     skinny: int = 0           # dispatches that resolved to the SpMV lane
     peak: int = 0
+    # cost-model policy accounting: near-miss bucket merges applied this
+    # flush, dispatches they saved (members - 1 per merge cluster), and
+    # requests whose (alpha, beta) rode a folded per-member vector
+    merged_groups: int = 0
+    merge_saved: int = 0
+    folded: int = 0
     # engine-stat deltas attributed to this flush (autotuning + plan cache;
     # see EngineStats): dispatches that ran a DB-tuned plan, TuningDB
     # lookups resolved while building this flush's plans, and the cold
@@ -190,6 +210,39 @@ class SpmmScheduler:
     no longer fails or pins more device memory than exists; it just rides
     the streaming tier.
 
+    **Cost-model policy mode** (``policy=`` a
+    :class:`repro.launch.policy.MergePolicy`): two exact-key restrictions
+    relax, both provably bit-identical per member:
+
+    * *epilogue folding* — ``(alpha, beta)`` leave the group key for
+      backends whose batched path applies them as a per-member ``(G,)``
+      vector (``policy.fold_epilogue``; the general case of the gate —
+      same FMA per member as the scalar epilogue), so mixed-epilogue
+      bucket-mates share one dispatch;
+    * *near-miss merging* — after grouping, a merge pass re-prices
+      adjacent LW / padded-N / BSR-block-count buckets with
+      ``repro.core.perfmodel.packed_event_cycles`` and merges them into
+      one padded group exactly when the merged dispatch is modeled
+      cheaper than the split dispatches (padding waste vs per-dispatch
+      overhead; narrow members are widened with the inert
+      ``repad_lw`` zero slots).  ``stats["merged_groups"]`` /
+      ``["merge_saved_dispatches"]`` / ``["folded_requests"]`` account
+      for both.
+
+    **Continuous batching** (``background_flush=True``, requires
+    ``async_pipeline=True``; implies a default policy): a daemon flusher
+    thread replaces caller-driven ``flush()`` as the admission mechanism —
+    it admits a forming group when the cost model calls it *full enough*
+    (``policy.full_enough`` — modeled work amortizes the per-dispatch
+    overhead) or when its most urgent member is within
+    ``deadline_margin_s`` of its ``deadline_s`` expiry; admitted groups
+    dispatch in priority order.  ``flush()`` still works (final drain);
+    :meth:`shutdown` stops the flusher, drains whatever is queued — a
+    half-formed merged group included — and joins the pipeline, so no
+    future is ever stranded.  Per-request latency (submit → future
+    resolution) is recorded; ``latency_p50`` / ``latency_p99`` report the
+    distribution (0.0 while empty).
+
     ``stats`` accumulates across flushes:
 
     * ``requests`` / ``groups`` / ``dispatches`` — problems served vs
@@ -221,10 +274,14 @@ class SpmmScheduler:
       cumulative numbers alone ambiguous).
     """
 
-    #: State shared between submitters, flush, and the async dispatch
-    #: thread: every access outside ``__init__`` must hold ``self._lock``
-    #: (enforced by the ``lock-discipline`` rule of ``repro.analysis``).
-    _lock_guarded = ("_pending", "_next_ticket", "stats")
+    #: State shared between submitters, flush, the async dispatch thread
+    #: and the background flusher: every access outside ``__init__`` must
+    #: hold ``self._lock`` (enforced by the ``lock-discipline`` rule of
+    #: ``repro.analysis``).
+    _lock_guarded = ("_pending", "_next_ticket", "stats", "_latencies")
+
+    #: bounded latency-sample window (most recent kept)
+    LATENCY_CAP = 65536
 
     def __init__(self, engine: Optional[SextansEngine] = None,
                  max_group: int = 64,
@@ -233,7 +290,11 @@ class SpmmScheduler:
                  n_tile: Optional[int] = None,
                  async_pipeline: bool = False,
                  pack_threads: Optional[int] = None,
-                 autotune: Optional[str] = None):
+                 autotune: Optional[str] = None,
+                 policy: Optional[MergePolicy] = None,
+                 background_flush: bool = False,
+                 flush_poll_s: float = 0.002,
+                 deadline_margin_s: float = 0.005):
         self.engine = engine or SextansEngine(tm=128, k0=512, chunk=8,
                                               impl="jnp")
         if autotune is not None:
@@ -243,16 +304,28 @@ class SpmmScheduler:
             self.engine.autotune = autotune
         if max_group < 1:
             raise ValueError("max_group must be >= 1")
+        if background_flush and not async_pipeline:
+            raise ValueError(
+                "background_flush requires async_pipeline=True — the "
+                "flusher hands admitted batches to the dispatch thread")
         self.max_group = max_group
         self.device_bytes = device_bytes
         self.window_chunk = window_chunk
         self.n_tile = n_tile
         self.async_pipeline = bool(async_pipeline)
+        #: cost-model grouping policy; continuous batching defaults one in
+        #: so admission has a "full enough" signal.  None = exact-key
+        #: grouping with scalar epilogues (the legacy behaviour).
+        self.policy = policy if policy is not None else (
+            MergePolicy() if background_flush else None)
+        self.flush_poll_s = float(flush_poll_s)
+        self.deadline_margin_s = float(deadline_margin_s)
         self._pipe = (PackExecutePipeline(pack_threads)
                       if self.async_pipeline else None)
         self._lock = threading.Lock()
         self._pending: List[_Entry] = []
         self._next_ticket = 0
+        self._latencies: List[float] = []
         self.stats: Dict[str, Any] = {
             "requests": 0,
             "groups": 0,
@@ -263,6 +336,9 @@ class SpmmScheduler:
             "n_tiles": 0,
             "skinny_dispatches": 0,
             "peak_payload_bytes": 0,
+            "merged_groups": 0,
+            "merge_saved_dispatches": 0,
+            "folded_requests": 0,
             "tuned_dispatches": 0,
             "tune_db_hits": 0,
             "tune_db_misses": 0,
@@ -270,6 +346,8 @@ class SpmmScheduler:
             "plan_build_warm_s": 0.0,
             "failed": 0,
             "flushes": 0,
+            "flusher_flushes": 0,
+            "flusher_errors": 0,
             "wall_s": 0.0,
             "preprocess_s": 0.0,
             "overlap_s": 0.0,
@@ -277,6 +355,12 @@ class SpmmScheduler:
             "flops": 0.0,
             "last_flush": {},
         }
+        self._stop_flusher = threading.Event()
+        self._flusher: Optional[threading.Thread] = None
+        if background_flush:
+            self._flusher = threading.Thread(
+                target=self._flusher_loop, name="spmm-flusher", daemon=True)
+            self._flusher.start()
 
     # -- queueing -----------------------------------------------------------
 
@@ -285,7 +369,10 @@ class SpmmScheduler:
         (flush-order position); async mode returns a :class:`SpmmFuture`
         immediately and starts the host pack on a worker thread.
 
-        Operands are normalized to ndarrays here (array-likes accepted)."""
+        Operands are normalized to ndarrays here (array-likes accepted);
+        SLO fields are validated here too — a negative or NaN
+        ``deadline_s`` / ``priority`` raises immediately rather than
+        poisoning the background flusher's admission arithmetic later."""
         b = np.asarray(request.b)
         if b.ndim != 2:
             raise ValueError("SpmmRequest.b must be 2-D (K, N)")
@@ -294,8 +381,20 @@ class SpmmScheduler:
             raise ValueError(
                 f"SpmmRequest.c must be (M, N) = "
                 f"{(request.a.shape[0], b.shape[1])}, got {c.shape}")
+        if request.deadline_s is not None:
+            d = float(request.deadline_s)
+            if not np.isfinite(d) or d < 0:
+                raise ValueError(
+                    f"SpmmRequest.deadline_s must be a finite, "
+                    f"non-negative number of seconds, got "
+                    f"{request.deadline_s!r}")
+        p = float(request.priority)
+        if not np.isfinite(p):
+            raise ValueError(f"SpmmRequest.priority must be a finite "
+                             f"number, got {request.priority!r}")
         if b is not request.b or c is not request.c:
             request = dataclasses.replace(request, b=b, c=c)
+        now = time.monotonic()
         # Ticket allocation and enqueue are one critical section: the
         # flush resolves futures by iterating _pending and assumes it is
         # ticket-ordered, so concurrent submitters must not interleave
@@ -304,13 +403,14 @@ class SpmmScheduler:
             with self._lock:
                 ticket = self._next_ticket
                 self._next_ticket += 1
-                self._pending.append(_Entry(ticket, request))
+                self._pending.append(_Entry(ticket, request, submit_ts=now))
             return ticket
         pack = self._pipe.submit_pack(self._pack_host, request)
         with self._lock:
             ticket = self._next_ticket
             self._next_ticket += 1
-            e = _Entry(ticket, request, future=SpmmFuture(ticket))
+            e = _Entry(ticket, request, future=SpmmFuture(ticket),
+                       submit_ts=now)
             e.pack = pack
             self._pending.append(e)
         return e.future
@@ -337,9 +437,19 @@ class SpmmScheduler:
             return len(self._pending)
 
     def shutdown(self, wait: bool = True) -> None:
-        """Join the async pipeline threads (no-op in synchronous mode).
-        Call after the last ``flush()``; pending futures resolve first
-        when ``wait=True``."""
+        """Stop the background flusher (if any), drain the queue, and
+        join the async pipeline threads (no-op in synchronous mode).
+
+        With ``wait=True`` everything still pending — including a
+        half-formed merged group the flusher had not yet admitted — is
+        flushed before the pipeline joins, so every outstanding future
+        resolves and the queue cannot strand work."""
+        if self._flusher is not None:
+            self._stop_flusher.set()
+            self._flusher.join()
+            self._flusher = None
+        if wait and self.async_pipeline and self.pending:
+            self.flush()                     # final drain
         if self._pipe is not None:
             self._pipe.shutdown(wait=wait)
 
@@ -367,6 +477,16 @@ class SpmmScheduler:
         from repro.core.hflex import bucket_geometry
 
         d = t.data
+        # Epilogue fold gate (policy mode): when the resolved backend's
+        # batched path applies (alpha, beta) as a per-member (G,) vector
+        # bit-identically, the scalars leave the key — (None, None) marks
+        # a folded group and _prep_group rebuilds the member vector.
+        # Backends outside the gate keep the exact-epilogue key.
+        a_k: Any = float(r.alpha)
+        b_k: Any = float(r.beta)
+        if self.policy is not None and self.policy.fold_epilogue(
+                resolve_backend(self.engine.impl, t, r.b)):
+            a_k = b_k = None
         if t.format is Format.BSR:
             # BSR bucket-mates: same weight tiling (K', F', TK, TF) and a
             # shared padded block-count bucket (stack_bsr pads every member
@@ -379,12 +499,10 @@ class SpmmScheduler:
             # executable cache keys on the *padded* bucket geometry —
             # distinct weight shapes could never share a dispatch anyway.
             return (t.format, (nb_b, d.k, d.f, d.tk, d.tf), t.shape, n_b,  # repro: ignore[trace-hazard] -- grouping key, not a jit key; stack_bsr needs exact (M, K)
-                    np.dtype(np.asarray(r.b).dtype).str,
-                    float(r.alpha), float(r.beta))
+                    np.dtype(np.asarray(r.b).dtype).str, a_k, b_k)
         n_b = bucket_geometry(d.mb, d.nw, d.lw, r.b.shape[1])[3]
         return (t.format, t.geometry, None, n_b,
-                np.dtype(np.asarray(r.b).dtype).str,
-                float(r.alpha), float(r.beta))
+                np.dtype(np.asarray(r.b).dtype).str, a_k, b_k)
 
     def _route(self, e: _Entry, groups: Dict, stream_lane: List) -> None:
         """Send a packed entry to its bucket group or the streaming lane."""
@@ -407,13 +525,35 @@ class SpmmScheduler:
         t0 = time.perf_counter()
         fmt, n_b = key[0], key[3]
         alpha, beta = key[5], key[6]
+        if alpha is None:
+            # folded epilogue: the group key carries (None, None) and each
+            # member's coefficients dispatch as a (G,) vector — the batched
+            # epilogue applies alpha[g] * acc + beta[g] * c, the same FMA
+            # per member as its scalar call (bit-identical by construction)
+            alpha = np.asarray([float(e.request.alpha) for e in chunk],
+                               np.float32)
+            beta = np.asarray([float(e.request.beta) for e in chunk],
+                              np.float32)
         g = len(chunk)
+        # Policy mode pads the group axis to a power-of-two bucket (dummy
+        # replicated members, zero dense operands, outputs discarded): the
+        # group executable keys on G, and continuous batching produces a
+        # different member count every flush — without G-bucketing each
+        # admission would recompile.  Same flush-invariance argument as
+        # the (MB*TM, NW*K0) embed below, applied to the batch axis.
+        g_pad = g
+        if self.policy is not None and g > 1:
+            g_pad = 1 << (g - 1).bit_length()
+            if self.max_group:
+                g_pad = max(g, min(g_pad, self.max_group))
+        pad_members = [chunk[0].tensor] * (g_pad - g)
         np_dtype = np.dtype(key[4])
         if fmt is Format.BSR:
             # BSR members share the exact logical (M, K) (part of the group
             # key) and the weight tiling; stack_bsr pads block counts up to
             # the shared bucket.  No ragged embed needed.
-            stacked = stack_bsr([e.tensor for e in chunk], device=False)
+            stacked = stack_bsr([e.tensor for e in chunk] + pad_members,
+                                device=False)
             m_cap, k_cap = chunk[0].tensor.shape
         else:
             # Embed to the geometry-constant bounds (MB*TM, NW*K0), NOT the
@@ -428,11 +568,17 @@ class SpmmScheduler:
             m_cap = d0.mb * d0.tm
             k_cap = d0.nw * d0.k0
             stacked = stack_hflex(
-                [_embed(e.tensor, m_cap, k_cap) for e in chunk],
+                [_embed(e.tensor, m_cap, k_cap) for e in chunk]
+                + [_embed(t, m_cap, k_cap) for t in pad_members],
                 device=False)
-        bg = np.zeros((g, k_cap, n_b), np_dtype)
+        if g_pad > g and np.ndim(alpha) > 0:
+            # dummy members: (0, 0) epilogue — their (discarded) outputs
+            # stay exact zeros regardless of the replicated values
+            alpha = np.concatenate([alpha, np.zeros(g_pad - g, np.float32)])
+            beta = np.concatenate([beta, np.zeros(g_pad - g, np.float32)])
+        bg = np.zeros((g_pad, k_cap, n_b), np_dtype)
         any_c = any(e.request.c is not None for e in chunk)
-        cg = np.zeros((g, m_cap, n_b), np_dtype) if any_c else None
+        cg = np.zeros((g_pad, m_cap, n_b), np_dtype) if any_c else None
         for i, e in enumerate(chunk):
             r = e.request
             bk, bn = r.b.shape
@@ -441,6 +587,64 @@ class SpmmScheduler:
                 cm, cn = r.c.shape
                 cg[i, :cm, :cn] = r.c
         return (stacked, bg, cg, alpha, beta), time.perf_counter() - t0
+
+    # -- cost-model merge pass (policy mode) ---------------------------------
+
+    def _sketch(self, key, members: List[_Entry]) -> GroupSketch:
+        """Summarize one formed group for the cost model: stacked member
+        pointer matrices (BSR: true block counts as pseudo-``q`` — the
+        pointer walk IS the block walk, priced against the block-count
+        bucket with TK as the window analogue), the group's padded
+        buckets, and whether the resolved backend walks padded slots."""
+        fmt, geo, n_b = key[0], key[1], key[3]
+        backend = resolve_backend(self.engine.impl, members[0].tensor,
+                                  members[0].request.b)
+        if fmt is Format.BSR:
+            q = np.asarray(
+                [[[int(np.asarray(e.tensor.data.indptr)[-1])]]
+                 for e in members], np.int64)
+            lw, k0 = geo[0], geo[3]
+        else:
+            q = np.stack([np.asarray(e.tensor.data.q) for e in members])
+            lw, k0 = geo[2], geo[4]
+        return GroupSketch(key=key, q=q, n=n_b, k0=k0, lw=lw,
+                           flat=backend in FLAT_BACKENDS)
+
+    def _merge_groups(self, groups: Dict, ctr: _FlushCounters) -> Dict:
+        """Near-miss merge pass: let the policy re-price this flush's
+        groups (``plan_merges``) and apply every cost-positive cluster —
+        narrow HFLEX members are widened to the target LW bucket with
+        :func:`repro.sparse_api.repad_lw` (inert zero slots; ``q``/``nse``
+        untouched), BSR members re-bucket inside ``stack_bsr``, and ragged
+        N rides the existing zero-padded ``bg`` assembly — so the merged
+        dispatch is bit-identical per member to the split dispatches."""
+        if self.policy is None or len(groups) < 2:
+            return groups
+        sketches = [self._sketch(key, members)
+                    for key, members in groups.items()]
+        clusters = self.policy.plan_merges(sketches,
+                                           max_group=self.max_group)
+        for idx, cl in enumerate(clusters):
+            members = sorted((e for key in cl.keys for e in groups.pop(key)),
+                             key=lambda e: e.ticket)
+            key0 = cl.keys[0]
+            fmt, geo = key0[0], key0[1]
+            if fmt is Format.BSR:
+                geo_t = (cl.lw,) + tuple(geo[1:])
+            else:
+                geo_t = tuple(geo[:2]) + (cl.lw,) + tuple(geo[3:])
+                for e in members:
+                    if e.tensor.data.lw < cl.lw:
+                        e.tensor = repad_lw(e.tensor, cl.lw)
+            # the ("merged", idx) suffix keeps the target distinct from
+            # any surviving exact-key group the planner chose NOT to fold
+            # into this cluster (prep only reads fixed key positions)
+            target = ((fmt, geo_t, key0[2], cl.n) + tuple(key0[4:])
+                      + (("merged", idx),))
+            groups[target] = members
+            ctr.merged_groups += 1
+            ctr.merge_saved += len(cl.keys) - 1
+        return groups
 
     # -- dispatch stage ------------------------------------------------------
 
@@ -475,6 +679,8 @@ class SpmmScheduler:
                         ctr: _FlushCounters) -> None:
         stacked, bg, cg, alpha, beta = prep
         self._count_skinny(stacked, bg, ctr)
+        if np.ndim(alpha) > 0:
+            ctr.folded += len(chunk)
         out = self.engine.spmm_group(
             stacked, jnp.asarray(bg),
             None if cg is None else jnp.asarray(cg), alpha, beta)
@@ -545,6 +751,7 @@ class SpmmScheduler:
 
         results: Dict[int, Tuple[jax.Array, int, int]] = {}
         ctr = _FlushCounters()
+        groups = self._merge_groups(groups, ctr)
         es0 = eng.stats_snapshot()
         for key, members in groups.items():
             for lo in range(0, len(members), self.max_group):
@@ -564,12 +771,14 @@ class SpmmScheduler:
             jax.block_until_ready(out)
         self._fold_engine_deltas(ctr, es0)
         wall = time.perf_counter() - t0
+        done_ts = time.monotonic()
         # synchronous mode: packing is fully serialized with execution, so
         # ALL pack time is stall, none hidden (overlap_s stays 0)
         self._note_flush(len(pending), ctr, wall, pack_s,
                          stall_s=pack_s, failed=0,
                          flops=sum(_request_flops(e.request)
-                                   for e in pending))
+                                   for e in pending),
+                         latencies=[done_ts - e.submit_ts for e in pending])
         return [
             np.asarray(results[e.ticket][0])[:results[e.ticket][1],
                                              :results[e.ticket][2]]
@@ -630,6 +839,8 @@ class SpmmScheduler:
             pack_s += dt
             self._route(e, groups, stream_lane)
 
+        ctr = _FlushCounters()
+        groups = self._merge_groups(groups, ctr)
         singles: List[List[_Entry]] = []
         stacked_units: List[Tuple[Any, List[_Entry]]] = []
         for key, members in groups.items():
@@ -647,7 +858,6 @@ class SpmmScheduler:
         }
 
         results: Dict[int, Tuple[jax.Array, int, int]] = {}
-        ctr = _FlushCounters()
         es0 = self.engine.stats_snapshot()
         for chunk in singles:           # no host prep — dispatch first
             e = chunk[0]
@@ -682,34 +892,130 @@ class SpmmScheduler:
                 failed[e.ticket] = exc
         self._fold_engine_deltas(ctr, es0)
 
-        # resolve strictly in ticket order: a done future implies every
-        # earlier future of the flush is done (submit-order determinism
-        # even when groups completed out of order above)
-        restored: List[_Entry] = []
-        for e in entries:
-            if e.ticket in failed:
-                e.future._set_exception(failed[e.ticket])
-                restored.append(_Entry(e.ticket, e.request,
-                                       future=SpmmFuture(e.ticket)))
-            else:
-                out, m, n = results[e.ticket]
-                e.future._set_result(np.asarray(out)[:m, :n])
+        # restore failed requests and record the flush's stats BEFORE any
+        # future resolves: a caller that wakes on the batch's last future
+        # must observe the counters and latency samples of the flush that
+        # produced its result
+        restored = [_Entry(e.ticket, e.request, future=SpmmFuture(e.ticket))
+                    for e in entries if e.ticket in failed]
         if restored:
             with self._lock:
                 self._pending = restored + self._pending
-        wall = time.perf_counter() - t0
         ok = [e for e in entries if e.ticket not in failed]
+        done_ts = time.monotonic()
+        wall = time.perf_counter() - t0
         self._note_flush(len(ok), ctr, wall, pack_s, stall_s,
                          failed=len(restored),
-                         flops=sum(_request_flops(e.request) for e in ok))
+                         flops=sum(_request_flops(e.request) for e in ok),
+                         latencies=[done_ts - e.submit_ts for e in ok])
+        # resolve strictly in ticket order: a done future implies every
+        # earlier future of the flush is done (submit-order determinism
+        # even when groups completed out of order above; the flusher may
+        # hand batches over in priority order, so re-sort here)
+        for e in sorted(entries, key=lambda x: x.ticket):
+            if e.ticket in failed:
+                e.future._set_exception(failed[e.ticket])
+            else:
+                out, m, n = results[e.ticket]
+                e.future._set_result(np.asarray(out)[:m, :n])
+
+    # -- execution: deadline-driven background flusher ------------------------
+
+    def _flusher_loop(self) -> None:
+        """Daemon admission loop (``background_flush=True``): every
+        ``flush_poll_s`` it scans the queue and hands cost-model-admitted
+        batches to the dispatch thread.  A scan failure is counted and the
+        loop keeps running — per-request failures are owned by the
+        futures, and a policy bug must not silently kill admission."""
+        while not self._stop_flusher.wait(self.flush_poll_s):
+            try:
+                self._flush_ready()
+            except Exception:   # noqa: BLE001 — keep the daemon alive
+                with self._lock:
+                    self.stats["flusher_errors"] += 1
+
+    def _flush_ready(self) -> int:
+        """One admission scan: group the already-packed pending entries
+        exactly as a flush would, admit every group that is either *full
+        enough* (``policy.full_enough`` — modeled work amortizes the
+        dispatch overhead) or *deadline-urgent* (its most urgent member
+        is within ``deadline_margin_s`` of ``submit_ts + deadline_s``),
+        order admitted groups by priority, and hand the batch to the
+        dispatch thread.  Entries still packing stay queued for the next
+        scan; failed packs and streaming-lane entries (batching buys them
+        nothing) are admitted immediately.  Returns the admitted count.
+
+        Races are resolved by re-intersecting with ``_pending`` under the
+        lock at extraction time: an entry ``cancel()``-ed (or drained by a
+        caller ``flush()``) after the scan snapshot simply is not there
+        any more and is left alone."""
+        now = time.monotonic()
+        with self._lock:
+            snapshot = list(self._pending)
+        if not snapshot:
+            return 0
+        groups: Dict[Any, List[_Entry]] = {}
+        stream_lane: List[_Entry] = []
+        admit: set = set()                     # tickets
+        for e in snapshot:
+            if e.pack is None or not e.pack.done():
+                continue                       # still packing — next scan
+            try:
+                e.tensor, _ = e.pack.result()  # done: returns immediately
+            except Exception:   # noqa: BLE001 — owned by the future
+                # failed pack: admit now so _flush_async resolves the
+                # future with the exception instead of queueing it forever
+                admit.add(e.ticket)
+                continue
+            self._route(e, groups, stream_lane)
+        admit.update(e.ticket for e in stream_lane)
+        ordered: List[Tuple[float, List[_Entry]]] = []
+        for key, members in groups.items():
+            urgent = any(
+                e.request.deadline_s is not None
+                and now + self.deadline_margin_s
+                    >= e.submit_ts + e.request.deadline_s
+                for e in members)
+            full = (len(members) >= self.max_group
+                    or self.policy.full_enough(self._sketch(key, members),
+                                               max_group=self.max_group))
+            if urgent or full:
+                ordered.append(
+                    (max(e.request.priority for e in members), members))
+        ordered.sort(key=lambda pm: -pm[0])
+        rank = {e.ticket: i for i, (_, ms) in enumerate(ordered)
+                for e in ms}
+        admit.update(rank)
+        if not admit:
+            return 0
+        with self._lock:
+            batch = [e for e in self._pending if e.ticket in admit]
+            self._pending = [e for e in self._pending
+                             if e.ticket not in admit]
+        if not batch:
+            return 0
+        # priority order: higher-priority groups' preps start earlier on
+        # the dispatch thread (futures still resolve in ticket order)
+        batch.sort(key=lambda e: (rank.get(e.ticket, len(ordered)),
+                                  e.ticket))
+        self._pipe.submit_dispatch(self._flush_async, batch)
+        with self._lock:
+            self.stats["flusher_flushes"] += 1
+        return len(batch)
 
     # -- stats ---------------------------------------------------------------
 
     def _note_flush(self, n_ok: int, ctr: _FlushCounters, wall: float,
                     pack_s: float, stall_s: float, failed: int,
-                    flops: float) -> None:
+                    flops: float,
+                    latencies: Sequence[float] = ()) -> None:
         overlap = max(0.0, pack_s - stall_s)
         hidden = min(1.0, overlap / pack_s) if pack_s > 0 else 0.0
+        # guarded against empty flushes: an all-failed async batch (n_ok
+        # = 0, no latency samples) must not divide by zero anywhere here
+        lat = np.asarray(latencies, np.float64)
+        p50 = float(np.percentile(lat, 50)) if lat.size else 0.0
+        p99 = float(np.percentile(lat, 99)) if lat.size else 0.0
         with self._lock:
             st = self.stats
             st["requests"] += n_ok
@@ -721,6 +1027,12 @@ class SpmmScheduler:
             st["n_tiles"] = max(st["n_tiles"], ctr.n_tiles)
             st["skinny_dispatches"] += ctr.skinny
             st["peak_payload_bytes"] = max(st["peak_payload_bytes"], ctr.peak)
+            st["merged_groups"] += ctr.merged_groups
+            st["merge_saved_dispatches"] += ctr.merge_saved
+            st["folded_requests"] += ctr.folded
+            self._latencies.extend(latencies)
+            if len(self._latencies) > self.LATENCY_CAP:
+                del self._latencies[:-self.LATENCY_CAP]
             st["tuned_dispatches"] += ctr.tuned
             st["tune_db_hits"] += ctr.db_hits
             st["tune_db_misses"] += ctr.db_misses
@@ -742,6 +1054,11 @@ class SpmmScheduler:
                 "window_dispatches": ctr.window_disp,
                 "n_tiles": ctr.n_tiles,
                 "skinny_dispatches": ctr.skinny,
+                "merged_groups": ctr.merged_groups,
+                "merge_saved_dispatches": ctr.merge_saved,
+                "folded_requests": ctr.folded,
+                "latency_p50_s": p50,
+                "latency_p99_s": p99,
                 "tuned_dispatches": ctr.tuned,
                 "tune_db_hits": ctr.db_hits,
                 "tune_db_misses": ctr.db_misses,
@@ -778,6 +1095,37 @@ class SpmmScheduler:
             p = self.stats["preprocess_s"]
             return min(1.0, self.stats["overlap_s"] / p) if p > 0 else 0.0
 
+    def latency_percentile(self, p: float) -> float:
+        """Percentile of recorded submit→resolution latency in seconds
+        (bounded window of the most recent ``LATENCY_CAP`` samples);
+        0.0 while no request has completed — never a division/percentile
+        of an empty sample set."""
+        with self._lock:
+            if not self._latencies:
+                return 0.0
+            return float(np.percentile(np.asarray(self._latencies,
+                                                  np.float64), p))
+
+    @property
+    def latency_p50(self) -> float:
+        return self.latency_percentile(50.0)
+
+    @property
+    def latency_p99(self) -> float:
+        return self.latency_percentile(99.0)
+
+
+def _policy_stats(sched: SpmmScheduler) -> Dict[str, Any]:
+    """The scheduler's cost-model policy + latency stats for reporting."""
+    return {
+        "merged_groups": sched.stats["merged_groups"],
+        "merge_saved_dispatches": sched.stats["merge_saved_dispatches"],
+        "folded_requests": sched.stats["folded_requests"],
+        "flusher_flushes": sched.stats["flusher_flushes"],
+        "latency_p50_s": sched.latency_p50,
+        "latency_p99_s": sched.latency_p99,
+    }
+
 
 def serve_spmm_requests(
     requests: Sequence[SpmmRequest],
@@ -791,6 +1139,8 @@ def serve_spmm_requests(
     window_chunk: Optional[int] = None,
     n_tile: Optional[int] = None,
     autotune: Optional[str] = None,
+    policy: Optional[MergePolicy] = None,
+    continuous: bool = False,
 ) -> Tuple[List[np.ndarray], Dict[str, Any]]:
     """Run a pool of SpMM requests; returns results + serving stats.
 
@@ -826,6 +1176,16 @@ def serve_spmm_requests(
     and the cold-vs-warm plan-build wall split — a warm process (DB +
     persisted executables populated) shows ``plan_build_warm_s`` in place
     of the cold trace/compile/measure time.
+
+    ``policy`` enables the scheduler's cost-model grouping (near-miss
+    bucket merging + epilogue folding; see
+    :class:`repro.launch.policy.MergePolicy`); ``continuous=True``
+    additionally runs the deadline-driven background flusher (implies the
+    async pipeline; requests' ``deadline_s`` / ``priority`` drive
+    admission) with a caller-driven final drain for whatever the pool's
+    tail leaves behind.  The stats then include ``merged_groups``,
+    ``merge_saved_dispatches``, ``folded_requests`` and the per-request
+    latency percentiles ``latency_p50_s`` / ``latency_p99_s``.
     """
     from repro.sparse_api import PLAN_STATS
 
@@ -842,15 +1202,22 @@ def serve_spmm_requests(
     overlap_s = 0.0
     pack_hidden_fraction = 0.0
 
-    if async_pipeline:
+    sched_extra: Dict[str, Any] = {}
+    if async_pipeline or continuous:
         sched = SpmmScheduler(engine, max_group=max_group,
                               device_bytes=device_bytes,
                               window_chunk=window_chunk, n_tile=n_tile,
                               async_pipeline=True,
-                              pack_threads=pack_threads)
+                              pack_threads=pack_threads,
+                              policy=policy,
+                              background_flush=continuous)
         try:
             t0 = time.perf_counter()
             futs = [sched.submit(r) for r in requests]
+            # one-shot pool: drain whatever the background flusher (if
+            # any) has not admitted yet — the flusher's value shows under
+            # paced arrivals (benchmarks/run.py --only slo), while the
+            # wrapper guarantees completion for deadline-less pools
             sched.flush()
             outs = [f.result() for f in futs]
             wall = time.perf_counter() - t0
@@ -868,6 +1235,7 @@ def serve_spmm_requests(
         peak_payload = sched.stats["peak_payload_bytes"]
         overlap_s = sched.stats["overlap_s"]
         pack_hidden_fraction = sched.pack_hidden_fraction
+        sched_extra = _policy_stats(sched)
     elif batched:
         sched = SpmmScheduler(engine, max_group=max_group,
                               device_bytes=device_bytes,
@@ -886,6 +1254,7 @@ def serve_spmm_requests(
         n_tiles = sched.stats["n_tiles"]
         skinny_dispatches = sched.stats["skinny_dispatches"]
         peak_payload = sched.stats["peak_payload_bytes"]
+        sched_extra = _policy_stats(sched)
     else:
         outs = []
         # perf_counter (monotonic, high-resolution) + block_until_ready: JAX
@@ -932,6 +1301,12 @@ def serve_spmm_requests(
 
     stats = {
         "requests": len(requests),
+        "merged_groups": 0,
+        "merge_saved_dispatches": 0,
+        "folded_requests": 0,
+        "flusher_flushes": 0,
+        "latency_p50_s": 0.0,
+        "latency_p99_s": 0.0,
         "wall_s": wall,
         "preprocess_s": pack_s,
         "overlap_s": overlap_s,
@@ -950,6 +1325,7 @@ def serve_spmm_requests(
         "cache_misses": engine.stats.cache_misses,
         "plan_executables_compiled": PLAN_STATS["exec_misses"] - exec0,
     }
+    stats.update(sched_extra)
     # engine-delta reporting, uniform across the batched / async /
     # sequential paths: plan-cache visibility and the autotuning story
     es1 = engine.stats_snapshot()

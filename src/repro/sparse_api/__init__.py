@@ -78,6 +78,7 @@ from .tensor import (
     from_sparse_matrix,
     pack_bsr_weight,
     pack_hflex,
+    repad_lw,
     stack_bsr,
     stack_hflex,
 )
@@ -107,6 +108,7 @@ __all__ = [
     "stack_hflex",
     "stack_bsr",
     "bucket_block_count",
+    "repad_lw",
     "Backend",
     "register_backend",
     "get_backend",

@@ -168,6 +168,19 @@ def stream_finish(raw, c, alpha, beta, dtype):
     return (alpha * raw + beta * c.astype(jnp.float32)).astype(dtype)
 
 
+def _ab_expand(x, out_ndim: int):
+    """Broadcast an epilogue coefficient against a ``([G,] M, N)`` raw
+    accumulator: scalars pass through, a ``(G,)`` per-member vector gains
+    trailing singleton axes so each group member scales with its own
+    coefficient — the elementwise math is identical to running that member
+    alone with its scalar, so folding mixed epilogues into one group
+    dispatch is bit-exact by construction."""
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim == 0:
+        return x
+    return x.reshape(x.shape + (1,) * (out_ndim - x.ndim))
+
+
 @dataclasses.dataclass(frozen=True)
 class Backend:
     name: str
@@ -362,17 +375,23 @@ def _hflex_flat_exec(vals, cols_g, rows_g, b, c, alpha, beta, m):
     flattened ``b`` — one big gather + one big segment-sum for the whole
     group (a single dispatch, no vmap).  Each member's segments receive
     exactly the contributions the unbatched call would in the same order,
-    so results stay bit-identical per member.
+    so results stay bit-identical per member.  ``alpha``/``beta`` may be
+    ``(G,)`` per-member vectors on the group path — the epilogue is applied
+    at ``(G, M, N)`` with the coefficients broadcast along the group axis,
+    elementwise identical to the scalar epilogue per member.
     """
     if b.ndim == 3:
         g, k, n = b.shape
         goff = jnp.arange(g, dtype=jnp.int32)[:, None]
         rows_f = (rows_g + goff * m).reshape(-1)
         cols_f = (cols_g + goff * k).reshape(-1)
-        out = _hflex_flat_exec(
-            vals.reshape(-1), cols_f, rows_f,
-            b.reshape(g * k, n), c.reshape(g * m, n), alpha, beta, g * m)
-        return out.reshape(g, m, n)
+        bf = b.reshape(g * k, n)
+        contrib = (vals.reshape(-1)[:, None].astype(jnp.float32)
+                   * bf[cols_f].astype(jnp.float32))
+        acc = jax.ops.segment_sum(contrib, rows_f,
+                                  num_segments=g * m).reshape(g, m, n)
+        return (_ab_expand(alpha, 3) * acc
+                + _ab_expand(beta, 3) * c.astype(jnp.float32)).astype(b.dtype)
     contrib = vals[:, None].astype(jnp.float32) * b[cols_g].astype(jnp.float32)
     acc = jax.ops.segment_sum(contrib, rows_g, num_segments=m)
     return (alpha * acc + beta * c.astype(jnp.float32)).astype(b.dtype)
@@ -568,7 +587,9 @@ def _bsr_raw_jnp(a: SparseTensor, b):
 
 def _bsr_jnp(a: SparseTensor, b, c, alpha, beta):
     raw = _bsr_raw_jnp(a, b).astype(jnp.float32)
-    return (alpha * raw + beta * c.astype(jnp.float32)).astype(b.dtype)
+    return (_ab_expand(alpha, raw.ndim) * raw
+            + _ab_expand(beta, raw.ndim) * c.astype(jnp.float32)
+            ).astype(b.dtype)
 
 
 def _bsr_pallas(a: SparseTensor, b, c, alpha, beta, *, tn, interpret):
@@ -584,7 +605,9 @@ def _bsr_pallas(a: SparseTensor, b, c, alpha, beta, *, tn, interpret):
                                       tb=tn, tk=w.tk, tf=w.tf,
                                       interpret=interpret)
         raw = y[:, :n].transpose(0, 2, 1)[:, :m].astype(jnp.float32)
-        return (alpha * raw + beta * c.astype(jnp.float32)).astype(b.dtype)
+        return (_ab_expand(alpha, 3) * raw
+                + _ab_expand(beta, 3) * c.astype(jnp.float32)
+                ).astype(b.dtype)
     xb = jnp.pad(b, ((0, w.k - k), (0, 0))).T        # (N, K')
     xb = jnp.pad(xb, ((0, npad - n), (0, 0)))
     y = bsr_matmul_pallas(xb, w.blocks, w.brow, w.indptr,

@@ -78,7 +78,10 @@ def _spmm_bwd(name, okey, res, g):
         return _raw_reference(a.with_values(vals), b_)
 
     raw, vjp = jax.vjp(raw_fn, a.values, b)
-    ct = (alpha * g32).astype(raw.dtype)
+    # alpha/beta may be per-member (G,) vectors on a batched tensor: expand
+    # against the (G, M, N) cotangent so each member scales with its own
+    # coefficient (scalars pass through unchanged).
+    ct = (_bk._ab_expand(alpha, g32.ndim) * g32).astype(raw.dtype)
     dvals, db = vjp(ct)
 
     if a.format is Format.HFLEX:
@@ -106,9 +109,14 @@ def _spmm_bwd(name, okey, res, g):
     # and out-of-bounds output columns have zero cotangent, so their grads
     # vanish by construction.
 
-    dc = (beta * g32).astype(c.dtype)
-    dalpha = jnp.sum(g32 * raw.astype(jnp.float32)).astype(alpha.dtype)
-    dbeta = jnp.sum(g32 * c.astype(jnp.float32)).astype(beta.dtype)
+    dc = (_bk._ab_expand(beta, g32.ndim) * g32).astype(c.dtype)
+    # Vector coefficients keep their per-member axis: reduce only over the
+    # trailing (M, N) axes so d alpha / d beta match the (G,) primal shape.
+    ax_a = tuple(range(1, g32.ndim)) if jnp.ndim(alpha) > 0 else None
+    ax_b = tuple(range(1, g32.ndim)) if jnp.ndim(beta) > 0 else None
+    dalpha = jnp.sum(g32 * raw.astype(jnp.float32),
+                     axis=ax_a).astype(alpha.dtype)
+    dbeta = jnp.sum(g32 * c.astype(jnp.float32), axis=ax_b).astype(beta.dtype)
 
     da = jax.tree.map(_float0_zeros, a).with_values(dvals.astype(a.values.dtype))
     return (da, db.astype(b.dtype), dc, dalpha, dbeta)
@@ -335,7 +343,10 @@ def spmm(
       c: optional dense (M, N) array (defaults to zeros) — (G, M, N) when
         batched.
       alpha, beta: epilogue scalars — *traced*; sweeping them does not
-        recompile.  Shared across a batched group.
+        recompile.  For a batched ``a`` each may instead be a ``(G,)``
+        vector giving every group member its own epilogue, bit-identical
+        per member to running it alone with the scalar (the serving tier's
+        epilogue-folding hook).
       backend: a registered backend name, or "auto" (platform/format/density
         heuristic; see ``repro.sparse_api.backends``).
       **opts: static backend options (e.g. ``tn``, ``interpret``) — part of
@@ -363,8 +374,18 @@ def spmm(
     c_ = jnp.zeros(cshape, b.dtype) if c is None else jnp.asarray(c)
     if c_.shape != cshape:
         raise ValueError(f"c must have shape {cshape}, got {c_.shape}")
+    alpha_ = jnp.asarray(alpha, jnp.float32)
+    beta_ = jnp.asarray(beta, jnp.float32)
+    for nm, x in (("alpha", alpha_), ("beta", beta_)):
+        if x.ndim == 0:
+            continue
+        if g is None:
+            raise ValueError(
+                f"vector {nm} needs a batched tensor; got shape {x.shape} "
+                "on an unbatched spmm")
+        if x.shape != (g,):
+            raise ValueError(
+                f"vector {nm} must have shape (G,)=({g},), got {x.shape}")
     name = _bk.resolve_backend(backend, a, b)
     okey = tuple(sorted(opts.items()))
-    return _spmm_jit(name, okey, a, b, c_,
-                     jnp.asarray(alpha, jnp.float32),
-                     jnp.asarray(beta, jnp.float32))
+    return _spmm_jit(name, okey, a, b, c_, alpha_, beta_)

@@ -209,22 +209,30 @@ def _per_window_bytes(d, n: int, itemsize: int) -> int:
             + d.mb * d.lw * n * 4)
 
 
-def _ab_operands(cache: Dict, alpha, beta) -> Tuple[Any, Any]:
+def _ab_operands(cache: Dict, alpha, beta,
+                 g: Optional[int] = None) -> Tuple[Any, Any]:
     """Device buffers for the epilogue scalars, cached per value so hot
     loops never re-commit host scalars (traced/non-scalar inputs convert
-    directly)."""
+    directly).  Group plans (``g``) compile a ``(G,)`` per-member epilogue
+    signature, so scalars are broadcast up to it here — one executable
+    serves uniform and mixed-epilogue groups alike."""
+
+    def shaped(x):
+        x = jnp.asarray(x, jnp.float32)
+        if g is not None and x.ndim == 0:
+            x = jnp.broadcast_to(x, (g,))
+        return x
+
     try:
         key = (float(alpha), float(beta))
         cached = cache.get(key)
         if cached is None:
-            cached = (jnp.asarray(alpha, jnp.float32),
-                      jnp.asarray(beta, jnp.float32))
+            cached = (shaped(alpha), shaped(beta))
             if len(cache) < 256:
                 cache[key] = cached
         return cached
     except TypeError:           # traced / non-scalar: convert directly
-        return (jnp.asarray(alpha, jnp.float32),
-                jnp.asarray(beta, jnp.float32))
+        return (shaped(alpha), shaped(beta))
 
 
 class SpmmPlan:
@@ -280,9 +288,14 @@ class SpmmPlan:
         else:
             d = a.data
             bucket = (d.nb, d.k, d.f, d.tk, d.tf)
+        # Group plans compile a (G,) per-member epilogue signature (see
+        # _ab_operands) — the "abvec" marker keeps them from colliding with
+        # scalar-signature executables persisted under $SEXTANS_TUNE_DIR by
+        # older builds.
         self.exec_key = ("flat" if flat else "payload", self.backend, okey,
                          a.format, a.geometry, bucket, (m, k, n), g,
-                         str(self.dtype), mesh)
+                         str(self.dtype), mesh) + (
+                             ("abvec",) if g is not None else ())
 
         if flat:
             # Host-precomputed flat gather/scatter indices (same layout
@@ -336,7 +349,7 @@ class SpmmPlan:
         self._cshape = (m, n) if g is None else (g, m, n)
         b_s = jax.ShapeDtypeStruct(self._bshape, self.dtype)
         c_s = jax.ShapeDtypeStruct(self._cshape, self.dtype)
-        s_s = jax.ShapeDtypeStruct((), jnp.float32)
+        s_s = jax.ShapeDtypeStruct(() if g is None else (g,), jnp.float32)
         arg_shapes = tuple(
             jax.ShapeDtypeStruct(x.shape, x.dtype) for x in self._operands
         ) + (b_s, c_s, s_s, s_s)
@@ -401,7 +414,9 @@ class SpmmPlan:
 
         ``b`` must be ``(K, N)`` — ``(G, K, N)`` for a group plan — of the
         planned dtype; ``c`` defaults to a cached zeros block.
-        ``alpha``/``beta`` are runtime operands (no recompile).  ``values``
+        ``alpha``/``beta`` are runtime operands (no recompile); a group
+        plan also accepts ``(G,)`` per-member vectors (scalars broadcast),
+        each member's epilogue bit-identical to its scalar run.  ``values``
         substitutes a new non-zero payload with the packed structure of
         ``A`` (same shape as ``A.values`` — per-group for a group plan).
         """
@@ -418,7 +433,8 @@ class SpmmPlan:
             # cast to the planned dtype: the executable was compiled for
             # it, and the batched scheduler casts mismatched c the same way
             c = jnp.asarray(c, self.dtype)
-        alpha, beta = _ab_operands(self._ab_cache, alpha, beta)
+        alpha, beta = _ab_operands(self._ab_cache, alpha, beta,
+                                   g=self.group)
         ops = self._operands
         if values is not None:
             values = jnp.asarray(values)

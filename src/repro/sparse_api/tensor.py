@@ -51,6 +51,7 @@ __all__ = [
     "stack_hflex",
     "stack_bsr",
     "bucket_block_count",
+    "repad_lw",
 ]
 
 
@@ -641,6 +642,51 @@ def stack_hflex(tensors, device: bool = True) -> SparseTensor:
 
     return maybe_validate(
         SparseTensor(data=stacked, format=Format.HFLEX, shape=t0.shape))
+
+
+def repad_lw(t: SparseTensor, lw: int) -> SparseTensor:
+    """Widen an HFLEX tensor's slab LW axis to ``lw`` with inert zero slots.
+
+    Only ``vals``/``cols``/``rows`` grow (zero-filled); ``q``/``nse`` and
+    every geometry static besides LW are untouched, so the padding is
+    *inert*: the Pallas kernels walk exactly ``q`` chunk trips and never
+    reach the new slots, and the flat jnp path's extra contributions are
+    ``0.0 * b[0]`` terms — ``±0.0`` added into segment-sum accumulators
+    that are never ``-0.0`` (they start at ``+0.0``, and an IEEE-754
+    round-to-nearest sum of nonzero terms cannot produce ``-0.0``), an
+    exact identity.  Results are therefore bit-identical to the original
+    tensor on every backend.
+
+    This is how the cost-model merge policy turns *near-miss* LW buckets
+    into bucket-mates: re-pad the narrow members up to the widest member's
+    bucket, then :func:`stack_hflex` the union into one dispatch.  Works on
+    host-resident (numpy) and device payloads alike; batched (stacked)
+    tensors pass through with the group axis intact.
+    """
+    if not isinstance(t, SparseTensor):
+        raise TypeError(f"repad_lw expects a SparseTensor, got "
+                        f"{type(t).__name__}")
+    if t.format is not Format.HFLEX:
+        raise ValueError("repad_lw supports Format.HFLEX only")
+    d = t.data
+    cur = d.lw
+    lw = int(lw)
+    if lw < cur:
+        raise ValueError(f"cannot shrink LW: {cur} -> {lw}")
+    if lw == cur:
+        return t
+    pad = [(0, 0)] * (d.vals.ndim - 1) + [(0, lw - cur)]
+    xp = np if t.on_host else jnp
+    data = dataclasses.replace(
+        d,
+        vals=xp.pad(d.vals, pad),
+        cols=xp.pad(d.cols, pad),
+        rows=xp.pad(d.rows, pad),
+    )
+    from repro.analysis.validate import maybe_validate
+
+    return maybe_validate(SparseTensor(data=data, format=Format.HFLEX,
+                                       shape=t.shape, nse=t.nse))
 
 
 def bucket_block_count(nb: int, floor: int = 8) -> int:

@@ -440,3 +440,102 @@ class TestShardedEnginePlan:
         y_ref = sp.plan_group(ts, 8, backend="jnp").run(b)
         np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                    rtol=1e-6, atol=1e-6)
+
+
+class TestVectorEpilogue:
+    """Per-member (G,) (alpha, beta) on batched spmm — the primitive the
+    serving policy's epilogue folding stands on.  Each member's result
+    must be bit-identical to its own scalar-epilogue call (same FMA, the
+    scalar merely broadcast per member)."""
+
+    def _pool(self, g=4, seed0=21):
+        mats, ts = _mates(g, seed0=seed0)
+        al = np.asarray([1.0, 0.5, 2.0, -1.5][:g], np.float32)
+        be = np.asarray([0.0, 1.0, 0.5, 2.0][:g], np.float32)
+        return mats, ts, al, be
+
+    def test_jnp_bit_identical_to_scalar_members(self, rng):
+        _, ts, al, be = self._pool()
+        s = sp.stack_hflex(ts)
+        b = jnp.asarray(rng.standard_normal((4, 200, 16)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((4, 256, 16)), jnp.float32)
+        y = sp.spmm(s, b, c, jnp.asarray(al), jnp.asarray(be),
+                    backend="jnp")
+        for i in range(4):
+            yi = sp.spmm(ts[i], b[i], c[i], float(al[i]), float(be[i]),
+                         backend="jnp")
+            assert np.array_equal(np.asarray(y[i]), np.asarray(yi))
+
+    def test_pallas_bit_identical_to_scalar_members(self, rng):
+        _, ts, al, be = self._pool(3)
+        s = sp.stack_hflex(ts)
+        b = jnp.asarray(rng.standard_normal((3, 200, 8)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((3, 256, 8)), jnp.float32)
+        opts = dict(tn=8, interpret=True)
+        y = sp.spmm(s, b, c, jnp.asarray(al[:3]), jnp.asarray(be[:3]),
+                    backend="pallas", **opts)
+        for i in range(3):
+            yi = sp.spmm(ts[i], b[i], c[i], float(al[i]), float(be[i]),
+                         backend="pallas", **opts)
+            assert np.array_equal(np.asarray(y[i]), np.asarray(yi))
+
+    def test_plan_group_vector_epilogue(self, rng):
+        _, ts, al, be = self._pool()
+        p = sp.plan_group(ts, 16, backend="jnp")
+        b = jnp.asarray(rng.standard_normal((4, 200, 16)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((4, 256, 16)), jnp.float32)
+        y = p.run(b, c, jnp.asarray(al), jnp.asarray(be))
+        s = sp.stack_hflex(ts)
+        y2 = sp.spmm(s, b, c, jnp.asarray(al), jnp.asarray(be),
+                     backend="jnp")
+        assert np.array_equal(np.asarray(y), np.asarray(y2))
+
+    def test_mixed_scalar_vector(self, rng):
+        """One side scalar, the other a (G,) vector — the scalar side
+        broadcasts, bit-identical to passing it as a constant vector."""
+        _, ts, al, _ = self._pool()
+        s = sp.stack_hflex(ts)
+        b = jnp.asarray(rng.standard_normal((4, 200, 16)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((4, 256, 16)), jnp.float32)
+        y = sp.spmm(s, b, c, jnp.asarray(al), 0.5, backend="jnp")
+        y2 = sp.spmm(s, b, c, jnp.asarray(al),
+                     jnp.full((4,), 0.5, jnp.float32), backend="jnp")
+        assert np.array_equal(np.asarray(y), np.asarray(y2))
+
+    def test_vector_shape_validated(self, rng):
+        _, ts, al, be = self._pool()
+        s = sp.stack_hflex(ts)
+        b = jnp.zeros((4, 200, 16), jnp.float32)
+        with pytest.raises(ValueError):
+            sp.spmm(s, b, alpha=jnp.asarray(al[:3]), backend="jnp")
+        with pytest.raises(ValueError):
+            sp.spmm(ts[0], jnp.zeros((200, 16), jnp.float32),
+                    alpha=jnp.asarray(al), backend="jnp")
+
+    def test_gradients_match_scalar_members(self, rng):
+        """d/db and d/dvals of the vector-epilogue batched spmm equal the
+        per-member scalar-epilogue grads."""
+        _, ts, al, be = self._pool(3)
+        s = sp.stack_hflex(ts)
+        b = jnp.asarray(rng.standard_normal((3, 200, 8)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((3, 256, 8)), jnp.float32)
+
+        gb = jax.grad(lambda bb: sp.spmm(
+            s, bb, c, jnp.asarray(al[:3]), jnp.asarray(be[:3]),
+            backend="jnp").sum())(b)
+        for i in range(3):
+            gbi = jax.grad(lambda bb: sp.spmm(
+                ts[i], bb, c[i], float(al[i]), float(be[i]),
+                backend="jnp").sum())(b[i])
+            np.testing.assert_allclose(np.asarray(gb[i]), np.asarray(gbi),
+                                       rtol=1e-6, atol=1e-6)
+
+        gv = jax.grad(lambda v: sp.spmm(
+            s.with_values(v), b, c, jnp.asarray(al[:3]),
+            jnp.asarray(be[:3]), backend="jnp").sum())(s.values)
+        for i in range(3):
+            gvi = jax.grad(lambda v: sp.spmm(
+                ts[i].with_values(v), b[i], c[i], float(al[i]),
+                float(be[i]), backend="jnp").sum())(ts[i].values)
+            np.testing.assert_allclose(np.asarray(gv[i]), np.asarray(gvi),
+                                       rtol=1e-6, atol=1e-6)

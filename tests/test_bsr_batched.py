@@ -595,3 +595,40 @@ class TestGroupedLayers:
         assert "shared" in p
         x = jnp.asarray(rng.standard_normal((1, 16, 32)), jnp.float32)
         assert moe.apply(p, cfg, x).shape == (1, 16, 32)
+
+
+class TestBsrVectorEpilogue:
+    """Per-member (G,) (alpha, beta) on batched BSR spmm — bit-identical
+    to each member's own scalar-epilogue call (the BSR leg of the serving
+    policy's epilogue folding)."""
+
+    def test_jnp_bit_identical_to_scalar_members(self, rng):
+        _, ts = _bsr_pool(4, seed0=31)
+        s = sp.stack_bsr(ts)
+        m, k = s.shape
+        al = np.asarray([1.0, 0.5, 2.0, -1.5], np.float32)
+        be = np.asarray([0.0, 1.0, 0.5, 2.0], np.float32)
+        b = jnp.asarray(rng.standard_normal((4, k, 8)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((4, m, 8)), jnp.float32)
+        y = sp.spmm(s, b, c, jnp.asarray(al), jnp.asarray(be),
+                    backend="jnp")
+        for i in range(4):
+            yi = sp.spmm(ts[i], b[i], c[i], float(al[i]), float(be[i]),
+                         backend="jnp")
+            assert np.array_equal(np.asarray(y[i]), np.asarray(yi))
+
+    def test_pallas_bit_identical_to_scalar_members(self, rng):
+        _, ts = _bsr_pool(3, seed0=41)
+        s = sp.stack_bsr(ts)
+        m, k = s.shape
+        al = np.asarray([2.0, 0.5, 1.0], np.float32)
+        be = np.asarray([1.0, 0.0, 0.5], np.float32)
+        b = jnp.asarray(rng.standard_normal((3, k, 8)), jnp.float32)
+        c = jnp.asarray(rng.standard_normal((3, m, 8)), jnp.float32)
+        opts = dict(interpret=True)
+        y = sp.spmm(s, b, c, jnp.asarray(al), jnp.asarray(be),
+                    backend="pallas", **opts)
+        for i in range(3):
+            yi = sp.spmm(ts[i], b[i], c[i], float(al[i]), float(be[i]),
+                         backend="pallas", **opts)
+            assert np.array_equal(np.asarray(y[i]), np.asarray(yi))

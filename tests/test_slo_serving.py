@@ -1,0 +1,407 @@
+"""SLO serving tests: cost-model merging, epilogue folding, and the
+deadline-driven background flusher.
+
+The policy-mode scheduler must be **bit-identical** to per-request
+``engine.spmm`` — merging only widens inert padding and folding only
+vectorizes the same FMA epilogue — while cutting dispatches/request on
+near-miss traffic.  The continuous-batching layer on top (daemon
+flusher) must compose with the async pipeline's guarantees: futures
+resolve in ticket order, ``cancel()`` racing an admission scan never
+strands or double-executes a request, and ``shutdown()`` drains a
+half-formed merged group instead of stranding its futures.
+"""
+
+import concurrent.futures
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.engine import SextansEngine
+from repro.core.sparse import power_law_sparse
+from repro.launch.policy import MergePolicy
+from repro.launch.serve import SpmmRequest, SpmmScheduler, serve_spmm_requests
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _engine():
+    return SextansEngine(tm=128, k0=512, chunk=8, impl="jnp")
+
+
+def _near_miss_pool(rng, n_req=12, deadline=None):
+    """Near-miss traffic: two adjacent LW buckets (3 vs 6 nnz/row at this
+    geometry) and per-request epilogues drawn from a small mixed set —
+    exactly what the exact-key scheduler fragments and the policy does
+    not."""
+    reqs = []
+    for i in range(n_req):
+        a = power_law_sparse(256, 256, 3 if i % 2 == 0 else 6, seed=i)
+        b = rng.standard_normal((256, 24)).astype(np.float32)
+        c = rng.standard_normal((256, 24)).astype(np.float32)
+        reqs.append(SpmmRequest(
+            a=a, b=b, c=c, alpha=[1.0, 0.5, 2.0][i % 3],
+            beta=[0.0, 1.0][i % 2], deadline_s=deadline))
+    return reqs
+
+
+def _reference(reqs):
+    eng = _engine()
+    return [np.asarray(eng.spmm(eng.pack(r.a), r.b, r.c, r.alpha, r.beta))
+            for r in reqs]
+
+
+MERGE_HAPPY = MergePolicy(dispatch_overhead_cycles=5e5)
+
+
+# ---------------------------------------------------------------------------
+# Cost-model merging + epilogue folding (synchronous flush)
+# ---------------------------------------------------------------------------
+
+
+class TestPolicyFlush:
+    def test_merge_and_fold_bit_identical(self, rng):
+        reqs = _near_miss_pool(rng)
+        refs = _reference(reqs)
+        sched = SpmmScheduler(_engine(), policy=MERGE_HAPPY)
+        for r in reqs:
+            sched.submit(r)
+        outs = sched.flush()
+        for o, ref in zip(outs, refs):
+            np.testing.assert_array_equal(o, ref)
+        st = sched.stats
+        assert st["merged_groups"] >= 1
+        assert st["merge_saved_dispatches"] >= 1
+        assert st["folded_requests"] == len(reqs)
+        # the entire near-miss pool collapsed into one dispatch group
+        assert st["groups"] == 1
+
+    def test_fewer_dispatches_than_exact_key(self, rng):
+        reqs = _near_miss_pool(rng)
+        pol = SpmmScheduler(_engine(), policy=MERGE_HAPPY)
+        exact = SpmmScheduler(_engine())
+        for r in reqs:
+            pol.submit(r)
+            exact.submit(r)
+        outs_p = pol.flush()
+        outs_e = exact.flush()
+        for p, e in zip(outs_p, outs_e):
+            np.testing.assert_array_equal(p, e)
+        assert pol.stats["dispatches"] < exact.stats["dispatches"]
+        assert pol.dispatches_per_request < exact.dispatches_per_request
+        assert exact.stats["merged_groups"] == 0
+        assert exact.stats["folded_requests"] == 0
+
+    def test_padding_dominant_policy_declines(self, rng):
+        """With free dispatches the cost model must refuse to merge —
+        the policy path then behaves exactly like epilogue-folded
+        exact-key batching."""
+        reqs = _near_miss_pool(rng)
+        sched = SpmmScheduler(
+            _engine(), policy=MergePolicy(dispatch_overhead_cycles=0.0))
+        for r in reqs:
+            sched.submit(r)
+        outs = sched.flush()
+        for o, ref in zip(outs, _reference(reqs)):
+            np.testing.assert_array_equal(o, ref)
+        assert sched.stats["merged_groups"] == 0
+        assert sched.stats["groups"] == 2      # one per LW bucket
+
+    def test_async_flush_merges_too(self, rng):
+        reqs = _near_miss_pool(rng)
+        refs = _reference(reqs)
+        sched = SpmmScheduler(_engine(), async_pipeline=True,
+                              policy=MERGE_HAPPY)
+        futs = [sched.submit(r) for r in reqs]
+        sched.flush()
+        for f, ref in zip(futs, refs):
+            np.testing.assert_array_equal(f.result(timeout=60), ref)
+        assert sched.stats["merged_groups"] >= 1
+        assert sched.stats["folded_requests"] == len(reqs)
+        assert sched.latency_p99 > 0.0
+        sched.shutdown()
+
+    def test_engine_counts_abvec_group_calls(self, rng):
+        eng = _engine()
+        sched = SpmmScheduler(eng, policy=MERGE_HAPPY)
+        for r in _near_miss_pool(rng):
+            sched.submit(r)
+        sched.flush()
+        assert eng.stats.abvec_group_calls >= 1
+
+
+# ---------------------------------------------------------------------------
+# Submit-time validation (deadline_s / priority)
+# ---------------------------------------------------------------------------
+
+
+class TestSubmitValidation:
+    @pytest.mark.parametrize("bad", [-1.0, -1e-9, float("nan"),
+                                     float("inf"), "soon"])
+    def test_bad_deadline_rejected(self, rng, bad):
+        sched = SpmmScheduler(_engine())
+        a = power_law_sparse(64, 64, 3, seed=0)
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        with pytest.raises((ValueError, TypeError)):
+            sched.submit(SpmmRequest(a=a, b=b, deadline_s=bad))
+        assert sched.pending == 0
+
+    @pytest.mark.parametrize("bad", [float("nan"), float("inf"), "high"])
+    def test_bad_priority_rejected(self, rng, bad):
+        sched = SpmmScheduler(_engine())
+        a = power_law_sparse(64, 64, 3, seed=0)
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        with pytest.raises((ValueError, TypeError)):
+            sched.submit(SpmmRequest(a=a, b=b, priority=bad))
+        assert sched.pending == 0
+
+    def test_good_values_accepted(self, rng):
+        sched = SpmmScheduler(_engine())
+        a = power_law_sparse(64, 64, 3, seed=0)
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        sched.submit(SpmmRequest(a=a, b=b, deadline_s=0.0, priority=-2.0))
+        sched.submit(SpmmRequest(a=a, b=b, deadline_s=10.0, priority=5))
+        assert sched.pending == 2
+        sched.flush()
+
+    def test_background_flush_requires_async(self):
+        with pytest.raises(ValueError):
+            SpmmScheduler(_engine(), background_flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Deadline-driven background flusher
+# ---------------------------------------------------------------------------
+
+
+class TestBackgroundFlusher:
+    def test_deadline_admission_no_caller_flush(self, rng):
+        """Futures resolve without anyone calling flush(): the daemon
+        admits the groups at their deadline, bit-identical to the
+        per-request reference."""
+        reqs = _near_miss_pool(rng, deadline=0.05)
+        refs = _reference(reqs)
+        sched = SpmmScheduler(
+            _engine(), async_pipeline=True, background_flush=True,
+            policy=MERGE_HAPPY, flush_poll_s=0.002)
+        futs = [sched.submit(r) for r in reqs]
+        for f, ref in zip(futs, refs):
+            np.testing.assert_array_equal(f.result(timeout=60), ref)
+        st = sched.stats
+        assert st["flusher_flushes"] >= 1
+        assert st["folded_requests"] == len(reqs)
+        assert sched.pending == 0
+        assert sched.latency_p50 > 0.0 and sched.latency_p99 > 0.0
+        sched.shutdown()
+
+    def test_full_enough_admits_before_deadline(self, rng):
+        """A cheap modeled dispatch overhead means even a tiny group is
+        'full enough' — admission must not wait for the (distant)
+        deadline."""
+        reqs = _near_miss_pool(rng, deadline=60.0)
+        sched = SpmmScheduler(
+            _engine(), async_pipeline=True, background_flush=True,
+            policy=MergePolicy(dispatch_overhead_cycles=0.0),
+            flush_poll_s=0.002)
+        t0 = time.monotonic()
+        futs = [sched.submit(r) for r in reqs]
+        for f in futs:
+            f.result(timeout=60)
+        assert time.monotonic() - t0 < 30.0     # nowhere near deadline
+        assert sched.stats["flusher_flushes"] >= 1
+        sched.shutdown()
+
+    def test_no_deadline_no_fullness_waits(self, rng):
+        """Neither signal fires: the flusher must NOT admit — work waits
+        for a caller flush (or shutdown drain)."""
+        a = power_law_sparse(64, 64, 3, seed=0)
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        sched = SpmmScheduler(
+            _engine(), async_pipeline=True, background_flush=True,
+            policy=MergePolicy(dispatch_overhead_cycles=1e12),
+            flush_poll_s=0.001)
+        f = sched.submit(SpmmRequest(a=a, b=b))
+        time.sleep(0.05)
+        assert not f.done() and sched.pending == 1
+        assert sched.stats["flusher_flushes"] == 0
+        sched.shutdown()                        # drains it
+        assert f.result(timeout=60) is not None
+        assert sched.pending == 0
+
+    def test_priority_orders_admitted_groups(self, rng):
+        """Priority affects dispatch order of admitted groups, never
+        result identity or ticket-order resolution."""
+        reqs = _near_miss_pool(rng, deadline=0.02)
+        for i, r in enumerate(reqs):
+            reqs[i] = SpmmRequest(a=r.a, b=r.b, c=r.c, alpha=r.alpha,
+                                  beta=r.beta, deadline_s=r.deadline_s,
+                                  priority=float(i % 2))
+        refs = _reference(reqs)
+        sched = SpmmScheduler(
+            _engine(), async_pipeline=True, background_flush=True,
+            policy=MERGE_HAPPY, flush_poll_s=0.002)
+        futs = [sched.submit(r) for r in reqs]
+        for f, ref in zip(futs, refs):
+            np.testing.assert_array_equal(f.result(timeout=60), ref)
+        sched.shutdown()
+
+    def test_cancel_races_flusher(self, rng):
+        """Hammer cancel() against a fast admission loop: every future
+        either resolves with the correct result or raises
+        CancelledError; nothing strands, nothing double-executes."""
+        ref_eng = _engine()
+        sched = SpmmScheduler(
+            _engine(), async_pipeline=True, background_flush=True,
+            policy=MERGE_HAPPY, flush_poll_s=0.001)
+        resolved = cancelled = 0
+        for trial in range(8):
+            reqs = _near_miss_pool(rng, n_req=6, deadline=0.003)
+            futs = [sched.submit(r) for r in reqs]
+            victim = futs[trial % len(futs)]
+            sched.cancel(victim.ticket)
+            for r, f in zip(reqs, futs):
+                try:
+                    out = f.result(timeout=60)
+                    ref = ref_eng.spmm(ref_eng.pack(r.a), r.b, r.c,
+                                       r.alpha, r.beta)
+                    np.testing.assert_array_equal(out, np.asarray(ref))
+                    resolved += 1
+                except concurrent.futures.CancelledError:
+                    cancelled += 1
+        assert resolved + cancelled == 8 * 6
+        assert resolved >= 8 * 5                # at most one victim/trial
+        assert sched.pending == 0
+        sched.shutdown()
+
+    def test_flusher_error_counted_not_fatal(self, rng):
+        """An admission-scan bug is counted and the daemon keeps
+        running; shutdown still drains the queue."""
+        sched = SpmmScheduler(
+            _engine(), async_pipeline=True, background_flush=True,
+            policy=MERGE_HAPPY, flush_poll_s=0.001)
+        orig = sched._sketch
+        calls = []
+
+        def boom(key, members):
+            calls.append(1)
+            raise RuntimeError("policy bug")
+
+        sched._sketch = boom
+        a = power_law_sparse(64, 64, 3, seed=0)
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        f = sched.submit(SpmmRequest(a=a, b=b, deadline_s=60.0))
+        deadline = time.monotonic() + 30
+        while not calls and time.monotonic() < deadline:
+            time.sleep(0.005)
+        time.sleep(0.02)
+        assert sched.stats["flusher_errors"] >= 1
+        sched._sketch = orig
+        sched.shutdown()
+        assert f.result(timeout=60) is not None
+
+
+# ---------------------------------------------------------------------------
+# Shutdown drains a half-formed merged group
+# ---------------------------------------------------------------------------
+
+
+class TestShutdownDrain:
+    def test_half_formed_group_drained(self, rng):
+        """Submit a near-miss pool that is neither full enough nor past
+        deadline, then shutdown(): every future must resolve (correctly)
+        and the queue must not strand."""
+        reqs = _near_miss_pool(rng, n_req=6)
+        refs = _reference(reqs)
+        sched = SpmmScheduler(
+            _engine(), async_pipeline=True, background_flush=True,
+            policy=MergePolicy(dispatch_overhead_cycles=1e12),
+            flush_poll_s=10.0)
+        futs = [sched.submit(r) for r in reqs]
+        assert sched.pending == len(reqs)
+        sched.shutdown()
+        for f, ref in zip(futs, refs):
+            np.testing.assert_array_equal(f.result(timeout=60), ref)
+        assert sched.pending == 0
+        # the drain flush still ran the merge pass on the union
+        assert sched.stats["merged_groups"] >= 1
+
+    def test_shutdown_wait_false_leaves_queue(self, rng):
+        a = power_law_sparse(64, 64, 3, seed=0)
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        sched = SpmmScheduler(
+            _engine(), async_pipeline=True, background_flush=True,
+            flush_poll_s=10.0)
+        f = sched.submit(SpmmRequest(a=a, b=b))
+        sched.shutdown(wait=False)
+        assert not f.done()
+        assert sched.pending == 1
+
+
+# ---------------------------------------------------------------------------
+# Empty-flush stat guards
+# ---------------------------------------------------------------------------
+
+
+class TestEmptyFlushGuards:
+    def test_all_ratios_zero_on_fresh_scheduler(self):
+        sched = SpmmScheduler(_engine())
+        assert sched.flush() == []
+        assert sched.dispatches_per_request == 0.0
+        assert sched.batched_fraction == 0.0
+        assert sched.pack_hidden_fraction == 0.0
+        assert sched.latency_p50 == 0.0
+        assert sched.latency_p99 == 0.0
+        assert sched.latency_percentile(99.9) == 0.0
+
+    def test_all_failed_async_flush_no_division(self, rng):
+        """A flush whose every request fails records failed counts and
+        zero latency samples without dividing by zero."""
+        sched = SpmmScheduler(_engine(), async_pipeline=True)
+        bad = SpmmRequest(a=power_law_sparse(64, 64, 3, seed=0),
+                          b=rng.standard_normal((48, 8)).astype(np.float32))
+        f = sched.submit(bad)                  # K mismatch -> pack fails
+        sched.flush()
+        with pytest.raises(Exception):
+            f.result(timeout=60)
+        assert sched.stats["failed"] >= 1
+        assert sched.latency_p50 == 0.0 and sched.latency_p99 == 0.0
+        sched.shutdown(wait=False)
+
+    def test_latency_buffer_capped(self, rng):
+        sched = SpmmScheduler(_engine())
+        sched.LATENCY_CAP = 8
+        a = power_law_sparse(64, 64, 3, seed=0)
+        b = rng.standard_normal((64, 8)).astype(np.float32)
+        for _ in range(3):
+            for _ in range(4):
+                sched.submit(SpmmRequest(a=a, b=b))
+            sched.flush()
+        assert len(sched._latencies) <= 8
+        assert sched.latency_p99 > 0.0
+
+
+# ---------------------------------------------------------------------------
+# serve_spmm_requests(continuous=True)
+# ---------------------------------------------------------------------------
+
+
+class TestServeContinuous:
+    def test_continuous_serve_stats_and_identity(self, rng):
+        reqs = _near_miss_pool(rng, deadline=0.05)
+        refs = _reference(reqs)
+        outs, st = serve_spmm_requests(reqs, _engine(), continuous=True,
+                                       policy=MERGE_HAPPY)
+        for o, ref in zip(outs, refs):
+            np.testing.assert_array_equal(o, ref)
+        assert st["merged_groups"] >= 1
+        assert st["folded_requests"] == len(reqs)
+        assert st["latency_p99_s"] > 0.0
+        assert st["dispatches_per_request"] < 1.0
+
+    def test_batched_serve_reports_zero_policy_stats(self, rng):
+        reqs = _near_miss_pool(rng, n_req=4)
+        outs, st = serve_spmm_requests(reqs, _engine(), batched=True)
+        assert st["merged_groups"] == 0
+        assert st["folded_requests"] == 0
+        assert st["latency_p99_s"] >= 0.0
